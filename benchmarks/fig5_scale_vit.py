@@ -1,0 +1,77 @@
+"""Paper Fig. 5: (a) large-scale FEMNIST-like across device scales;
+(b) ViT-12 (3 blocks x 4 encoders) vs vanilla FL."""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, ensure_dir
+from repro.configs.paper_models import vit
+from repro.core import make_adapter
+from repro.data import Batcher, dirichlet_partition, make_femnist_like, \
+    make_image_dataset
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.models.cnn import CNNConfig
+
+
+def run_scale(scales=(24, 48), rounds: int = 4, quiet: bool = False):
+    out = {}
+    ds = make_femnist_like(0, 4000)
+    test = make_femnist_like(1, 512)
+    for n in scales:
+        parts = dirichlet_partition(0, ds.labels, n, alpha=1.0)
+        clients = [ds.subset(p) for p in parts]
+        ccfg = CNNConfig(name="resnet18", arch="resnet18", num_classes=62,
+                         image_size=32, width_mult=0.25)
+        flc = FLConfig(n_devices=n, clients_per_round=max(n // 10, 2),
+                       local_epochs=1, batch_size=32, num_stages=4, seed=0)
+        srv = NeuLiteServer(make_adapter(ccfg, 4), clients, flc,
+                            test_batcher=Batcher(test, 128, kind="image"))
+        hist = srv.run(rounds)
+        accs = [h.test_acc for h in hist if h.test_acc is not None]
+        out[n] = float(accs[-1]) if accs else 0.0
+        if not quiet:
+            print(f"fig5a scale={n}: acc={out[n]:.3f}")
+    return out
+
+
+def run_vit(rounds: int = 4, quiet: bool = False):
+    ds = make_image_dataset(0, 2000, num_classes=32, image_size=32)
+    test = make_image_dataset(1, 512, num_classes=32, image_size=32)
+    parts = dirichlet_partition(0, ds.labels, 16, alpha=1.0)
+    clients = [ds.subset(p) for p in parts]
+    cfg = vit(num_classes=32, image_size=32, num_layers=6, d_model=96)
+    flc = FLConfig(n_devices=16, clients_per_round=4, local_epochs=1,
+                   batch_size=32, num_stages=3, seed=0)
+    srv = NeuLiteServer(make_adapter(cfg, 3), clients, flc,
+                        test_batcher=Batcher(test, 128, kind="image"))
+    hist = srv.run(rounds)
+    accs = [h.test_acc for h in hist if h.test_acc is not None]
+    acc = float(accs[-1]) if accs else 0.0
+    if not quiet:
+        print(f"fig5b vit: acc={acc:.3f} (3 blocks x {cfg.num_layers//3} "
+              f"encoders)")
+    return acc
+
+
+def run(rounds: int = 4, quiet: bool = False):
+    out = {"scale": run_scale(rounds=rounds, quiet=quiet),
+           "vit_acc": run_vit(rounds=rounds, quiet=quiet)}
+    d = ensure_dir("benchmarks")
+    with open(f"{d}/fig5.json", "w") as f:
+        json.dump({str(k): v for k, v in out["scale"].items()}
+                  | {"vit_acc": out["vit_acc"]}, f, indent=1)
+    return out
+
+
+def quick():
+    t0 = time.time()
+    acc = run_vit(rounds=2, quiet=True)
+    dt = (time.time() - t0) * 1e6
+    csv_row("fig5_scale_vit", dt, f"vit_acc={acc:.3f}")
+
+
+if __name__ == "__main__":
+    run(rounds=6)

@@ -1,0 +1,61 @@
+"""Paper Fig. 6: peak training memory per block vs full-model training.
+
+Two sources: the analytic memory model (core/memory.py — the counterpart of
+the paper's on-device measurements) and, for the pod-scale configs, XLA's
+``memory_analysis`` from the dry-run artifacts (results/dryrun).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import csv_row, ensure_dir
+from repro.core import make_adapter
+from repro.core.memory import estimate_full_memory, stage_memory_table
+from repro.models.cnn import CNNConfig
+
+
+def run(quiet: bool = False):
+    out = {}
+    for arch, stages in (("resnet18", 4), ("resnet34", 4), ("vgg11", 4),
+                         ("squeezenet", 4)):
+        ad = make_adapter(CNNConfig(name=arch, arch=arch), num_stages=stages)
+        tab = stage_memory_table(ad, batch=128)          # paper batch size
+        full = estimate_full_memory(ad, batch=128)
+        peak = max(e.total for e in tab)
+        out[arch] = {
+            "full_mb": full.total / 1e6,
+            "stage_mb": [e.total / 1e6 for e in tab],
+            "reduction": 1 - peak / full.total,
+        }
+        if not quiet:
+            print(f"fig6 {arch}: full={full.total/1e6:.0f}MB "
+                  f"stages={[f'{e.total/1e6:.0f}' for e in tab]} "
+                  f"reduction={out[arch]['reduction']:.1%}")
+    # transformer counterpart (the pod-scale claim)
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("granite-3-8b")
+    ad = make_adapter(cfg, num_stages=4)
+    tab = stage_memory_table(ad, batch=32, seq=128)
+    full = estimate_full_memory(ad, batch=32, seq=128)
+    out["granite-smoke"] = {"full_mb": full.total / 1e6,
+                            "stage_mb": [e.total / 1e6 for e in tab],
+                            "reduction": 1 - max(e.total for e in tab)
+                            / full.total}
+    d = ensure_dir("benchmarks")
+    with open(f"{d}/fig6_memory.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def quick():
+    t0 = time.time()
+    out = run(quiet=True)
+    dt = (time.time() - t0) * 1e6
+    red = out["resnet18"]["reduction"]
+    csv_row("fig6_memory", dt / len(out),
+            f"resnet18_peak_reduction={red:.1%};paper=50.4%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Paper Fig. 7: per-round training time per block vs full model.
+
+Measured step wall-time on CPU for each progressive stage vs the E2E step
+(paper: 1.84-2.31x per-round speedup on Jetson TX2).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, ensure_dir, timeit
+from repro.core import CurriculumHP, make_adapter, make_full_step, \
+    make_stage_step
+from repro.models.cnn import CNNConfig
+from repro.optim import sgd
+
+
+def run(archs=("resnet18", "vgg11"), batch: int = 32, quiet: bool = False):
+    out = {}
+    rng = np.random.default_rng(0)
+    for arch in archs:
+        ccfg = CNNConfig(name=arch, arch=arch, image_size=16,
+                         width_mult=0.5)
+        ad = make_adapter(ccfg, num_stages=4)
+        params = ad.init_params(jax.random.PRNGKey(0))
+        opt = sgd(0.05)
+        batch_data = {
+            "inputs": {"images": jnp.asarray(
+                rng.standard_normal((batch, 16, 16, 3)), jnp.float32)},
+            "labels": jnp.asarray(rng.integers(0, 10, batch), jnp.int32)}
+        full_step = jax.jit(make_full_step(ad, opt))
+        ostate = opt.init(params)
+        t_full = timeit(lambda: full_step(ostate, params, batch_data)[2])
+        stage_ts = []
+        for t in range(4):
+            frozen, trainable = ad.split_stage(params, t)
+            step = jax.jit(make_stage_step(ad, opt,
+                                           CurriculumHP(mu=0.0), t))
+            st = opt.init(trainable)
+            stage_ts.append(timeit(
+                lambda: step(st, trainable, frozen, batch_data,
+                             trainable)[2]))
+        speedups = [t_full / s for s in stage_ts]
+        out[arch] = {"full_ms": t_full * 1e3,
+                     "stage_ms": [s * 1e3 for s in stage_ts],
+                     "speedups": speedups}
+        if not quiet:
+            print(f"fig7 {arch}: full={t_full*1e3:.1f}ms "
+                  f"stages={[f'{s*1e3:.1f}' for s in stage_ts]}ms "
+                  f"speedup={min(speedups):.2f}-{max(speedups):.2f}x")
+    d = ensure_dir("benchmarks")
+    with open(f"{d}/fig7_time.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def quick():
+    t0 = time.time()
+    out = run(archs=("resnet18",), quiet=True)
+    dt = (time.time() - t0) * 1e6
+    sp = out["resnet18"]["speedups"]
+    csv_row("fig7_time", dt, f"stage_speedup={min(sp):.2f}-{max(sp):.2f}x;"
+            f"paper=1.84-2.31x")
+
+
+if __name__ == "__main__":
+    run()

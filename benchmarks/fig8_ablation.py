@@ -1,0 +1,58 @@
+"""Paper Fig. 8: ablation — w/o curriculum-aware loss (CA), w/o parameter
+co-adaptation (PC), vs full NeuLite and FedAvg."""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import csv_row, ensure_dir, make_fl_setup
+from repro.core import make_adapter
+from repro.federated.baselines import FedAvg
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.models.cnn import CNNConfig
+
+
+def run(rounds: int = 8, seed: int = 0, quiet: bool = False):
+    clients, test_b = make_fl_setup(seed)
+    ccfg = CNNConfig(name="resnet18", arch="resnet18", image_size=16,
+                     width_mult=0.25)
+    out = {}
+    variants = {
+        "neulite": {},
+        "wo_ca": {"curriculum": False},
+        "wo_pc": {"co_adaptation": False},
+    }
+    for name, kw in variants.items():
+        flc = FLConfig(n_devices=len(clients), clients_per_round=5,
+                       local_epochs=1, batch_size=32, num_stages=4,
+                       rounds_per_stage=max(rounds // 4, 1), seed=seed, **kw)
+        srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients,
+                            flc, test_batcher=test_b)
+        hist = srv.run(rounds)
+        accs = [h.test_acc for h in hist if h.test_acc is not None][-3:]
+        out[name] = float(sum(accs) / max(len(accs), 1))
+        if not quiet:
+            print(f"fig8 {name}: acc={out[name]:.3f}")
+    flc = FLConfig(n_devices=len(clients), clients_per_round=5,
+                   local_epochs=1, batch_size=32, num_stages=4, seed=seed)
+    fa = FedAvg(ccfg, clients, test_b, flc)
+    out["fedavg"] = fa.run(rounds).final_acc
+    if not quiet:
+        print(f"fig8 fedavg: acc={out['fedavg']:.3f}")
+    d = ensure_dir("benchmarks")
+    with open(f"{d}/fig8_ablation.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def quick():
+    t0 = time.time()
+    out = run(rounds=2, quiet=True)
+    dt = (time.time() - t0) * 1e6
+    csv_row("fig8_ablation", dt / 4,
+            f"neulite={out['neulite']:.3f};wo_ca={out['wo_ca']:.3f};"
+            f"wo_pc={out['wo_pc']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: Pallas flash attention + HSIC Gram vs jnp refs.
+
+On this CPU container the Pallas kernels run in interpret mode, so wall
+times here measure the *reference* path and call overhead; the Pallas path
+is validated for correctness and intended for TPU execution.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timeit
+from repro.core import hsic
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hsic_gram.ref import nhsic_ref
+
+
+def run(quiet: bool = False):
+    key = jax.random.PRNGKey(0)
+    out = {}
+    # attention reference throughput (per-shape)
+    for (B, S, H, KV, D) in [(2, 256, 8, 2, 64), (1, 1024, 8, 8, 64)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+        f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+        t = timeit(f, q, k, v)
+        flops = 4 * B * S * S / 2 * H * D
+        out[f"attn_ref_S{S}"] = {"s": t, "gflops": flops / t / 1e9}
+        if not quiet:
+            print(f"attn_ref B{B} S{S}: {t*1e3:.1f}ms "
+                  f"({flops/t/1e9:.1f} GFLOP/s)")
+    # nHSIC
+    for B, Dx in [(64, 128), (256, 256)]:
+        x = jax.random.normal(key, (B, Dx))
+        z = jax.random.normal(jax.random.PRNGKey(1), (B, 64))
+        f = jax.jit(hsic.nhsic)
+        t = timeit(f, x, z)
+        out[f"nhsic_B{B}"] = {"s": t}
+        if not quiet:
+            print(f"nhsic B{B} D{Dx}: {t*1e3:.2f}ms")
+    return out
+
+
+def quick():
+    t0 = time.time()
+    out = run(quiet=True)
+    dt = (time.time() - t0) * 1e6
+    csv_row("kernels_bench", dt / max(len(out), 1),
+            f"attn_S1024_gflops={out['attn_ref_S1024']['gflops']:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (quick mode).  Each module is
+also runnable standalone with full fidelity:
+
+  PYTHONPATH=src python -m benchmarks.table1_accuracy --rounds 40
+  PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (fig2_hsic_plane, fig5_scale_vit, fig6_memory,
+                            fig7_time, fig8_ablation, kernels_bench,
+                            roofline, table1_accuracy, table2_complexity)
+    print("name,us_per_call,derived")
+    for mod in (fig6_memory, fig7_time, roofline, kernels_bench,
+                fig2_hsic_plane, table2_complexity, fig8_ablation,
+                fig5_scale_vit, table1_accuracy):
+        try:
+            mod.quick()
+        except Exception as e:  # benchmark failures shouldn't hide others
+            print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

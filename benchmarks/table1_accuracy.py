@@ -1,0 +1,77 @@
+"""Paper Table 1: NeuLite vs baselines across models (non-IID).
+
+Synthetic-data scale-down (dataset gate, DESIGN.md §7): relative ordering
+and participation rates are the reproduced signal, not absolute CIFAR
+accuracy.  ``--rounds`` controls fidelity (paper: hundreds of rounds).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import csv_row, ensure_dir, make_fl_setup
+from repro.core import make_adapter
+from repro.federated.baselines import BASELINES
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.models.cnn import CNNConfig
+
+ARCHS = ("resnet18", "vgg11", "squeezenet")
+METHODS = ("fedavg", "exclusivefl", "allsmall", "depthfl", "heterofl",
+           "fedrolex", "tifl", "oort", "progfed")
+
+
+def run(rounds: int = 6, archs=ARCHS, methods=METHODS, width: float = 0.25,
+        seed: int = 0, quiet: bool = False):
+    out = {}
+    clients, test_b = make_fl_setup(seed)
+    for arch in archs:
+        ccfg = CNNConfig(name=arch, arch=arch, image_size=16,
+                         width_mult=width)
+        flc = FLConfig(n_devices=len(clients), clients_per_round=5,
+                       local_epochs=1, batch_size=32, num_stages=4,
+                       rounds_per_stage=max(rounds // 4, 1), seed=seed)
+        t0 = time.time()
+        srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients,
+                            flc, test_batcher=test_b)
+        hist = srv.run(rounds)
+        accs = [h.test_acc for h in hist if h.test_acc is not None]
+        out[(arch, "neulite")] = {
+            "acc": float(sum(accs[-3:]) / max(len(accs[-3:]), 1)),
+            "pr": srv.participation_rate, "time_s": time.time() - t0}
+        if not quiet:
+            print(f"table1 {arch} neulite acc={out[(arch,'neulite')]['acc']:.3f}"
+                  f" pr={srv.participation_rate:.2f}")
+        for m in methods:
+            t0 = time.time()
+            b = BASELINES[m](ccfg, clients, test_b, flc)
+            res = b.run(rounds)
+            out[(arch, m)] = {"acc": res.final_acc,
+                              "pr": res.participation_rate,
+                              "time_s": time.time() - t0}
+            if not quiet:
+                print(f"table1 {arch} {m} acc={res.final_acc:.3f} "
+                      f"pr={res.participation_rate:.2f}")
+    d = ensure_dir("benchmarks")
+    with open(f"{d}/table1.json", "w") as f:
+        json.dump({f"{a}|{m}": v for (a, m), v in out.items()}, f, indent=1)
+    return out
+
+
+def quick():
+    t0 = time.time()
+    out = run(rounds=2, archs=("resnet18",),
+              methods=("fedavg", "exclusivefl", "depthfl"), quiet=True)
+    dt = (time.time() - t0) * 1e6
+    nl = out[("resnet18", "neulite")]
+    best_base = max(v["acc"] for (a, m), v in out.items() if m != "neulite")
+    csv_row("table1_accuracy", dt / max(len(out), 1),
+            f"neulite_acc={nl['acc']:.3f};pr={nl['pr']:.2f};"
+            f"best_baseline={best_base:.3f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    a = ap.parse_args()
+    run(rounds=a.rounds)

@@ -1,0 +1,62 @@
+"""Paper Table 2: task complexity (ResNet18 vs ResNet34) — deeper models
+raise the memory wall; exclusive methods lose all devices, NeuLite keeps
+training (paper: ExclusiveFL/TiFL/Oort 'NA' on ResNet34)."""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import csv_row, ensure_dir, make_fl_setup
+from repro.core import make_adapter
+from repro.core.memory import estimate_full_memory
+from repro.federated.baselines import BASELINES
+from repro.federated.selection import memory_feasible
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.models.cnn import CNNConfig
+
+
+def run(rounds: int = 6, seed: int = 0, quiet: bool = False):
+    clients, test_b = make_fl_setup(seed)
+    out = {}
+    for arch in ("resnet18", "resnet34"):
+        ccfg = CNNConfig(name=arch, arch=arch, image_size=16,
+                         width_mult=0.25)
+        flc = FLConfig(n_devices=len(clients), clients_per_round=5,
+                       local_epochs=1, batch_size=32, num_stages=4,
+                       seed=seed)
+        srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients,
+                            flc, test_batcher=test_b)
+        # deepen the memory wall for resnet34 the way the paper does: same
+        # device fleet, bigger model
+        if arch == "resnet34":
+            # reuse resnet18's fleet budgets => full-model training infeasible
+            srv.devices = prev_devices
+        hist = srv.run(rounds)
+        accs = [h.test_acc for h in hist if h.test_acc is not None][-3:]
+        full_req = estimate_full_memory(srv.adapter, flc.batch_size).total
+        n_full = len(memory_feasible(srv.devices, full_req))
+        out[arch] = {"neulite_acc": float(sum(accs) / max(len(accs), 1)),
+                     "neulite_pr": srv.participation_rate,
+                     "full_model_feasible_devices": n_full}
+        prev_devices = srv.devices
+        if not quiet:
+            print(f"table2 {arch}: acc={out[arch]['neulite_acc']:.3f} "
+                  f"pr={out[arch]['neulite_pr']:.2f} "
+                  f"full-model-capable devices={n_full}")
+    d = ensure_dir("benchmarks")
+    with open(f"{d}/table2.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def quick():
+    t0 = time.time()
+    out = run(rounds=2, quiet=True)
+    dt = (time.time() - t0) * 1e6
+    csv_row("table2_complexity", dt / 2,
+            f"r34_pr={out['resnet34']['neulite_pr']:.2f};"
+            f"r34_full_capable={out['resnet34']['full_model_feasible_devices']}")
+
+
+if __name__ == "__main__":
+    run()

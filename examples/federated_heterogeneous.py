@@ -1,0 +1,40 @@
+"""The paper's core experiment at example scale: NeuLite vs FedAvg vs
+DepthFL on a heterogeneous 30-device fleet (ResNet18, non-IID synthetic
+CIFAR-like data).
+
+Reproduces the qualitative Table-1 story: NeuLite keeps a 100%
+participation rate under the memory wall while the exclusive baselines
+drop most devices.
+
+  PYTHONPATH=src python examples/federated_heterogeneous.py
+"""
+import numpy as np
+
+from repro.core import make_adapter
+from repro.data import Batcher, dirichlet_partition, make_image_dataset
+from repro.federated.baselines import DepthFL, ExclusiveFL, FedAvg
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.models.cnn import CNNConfig
+
+ROUNDS = 6
+ds = make_image_dataset(0, 3000, num_classes=10, image_size=16)
+test = make_image_dataset(1, 512, num_classes=10, image_size=16)
+parts = dirichlet_partition(0, ds.labels, 30, alpha=1.0)
+clients = [ds.subset(p) for p in parts]
+ccfg = CNNConfig(name="resnet18", arch="resnet18", image_size=16,
+                 width_mult=0.5)
+flc = FLConfig(n_devices=30, clients_per_round=5, local_epochs=1,
+               batch_size=32, num_stages=4, seed=0, rounds_per_stage=2)
+
+print("== NeuLite (progressive, curriculum, co-adaptation) ==")
+srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients, flc,
+                    test_batcher=Batcher(test, 128, kind="image"))
+hist = srv.run(ROUNDS, log_every=1)
+print(f"NeuLite: acc={hist[-1].test_acc:.3f} "
+      f"participation={srv.participation_rate:.0%}\n")
+
+for cls in (FedAvg, ExclusiveFL, DepthFL):
+    b = cls(ccfg, clients, Batcher(test, 128, kind="image"), flc)
+    res = b.run(ROUNDS)
+    print(f"{res.name:12s}: acc={res.accuracies[-1]:.3f} "
+          f"participation={res.participation_rate:.0%}")

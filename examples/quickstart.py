@@ -1,0 +1,62 @@
+"""Quickstart: NeuLite elastic progressive training in ~60 lines.
+
+Trains a small decoder-only transformer on synthetic LM data with the
+paper's full pipeline — block partitioning, curriculum-aware loss
+(CE − λ1·nHSIC(X;Z) − λ2·nHSIC(Y;Z) + prox), surrogate output modules,
+and round-robin model growth (Alg. 1) — and prints per-stage losses plus
+the analytic peak-memory saving vs end-to-end training.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CurriculumHP, RoundRobinSchedule, make_adapter, \
+    make_stage_step
+from repro.core.memory import estimate_full_memory, stage_memory_table
+from repro.data import make_lm_dataset
+from repro.models.config import ModelConfig
+from repro.optim import sgd
+
+cfg = ModelConfig(name="quickstart-12L", family="dense", num_layers=12,
+                  d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                  vocab_size=512, dtype="float32")
+NUM_STAGES, ROUNDS, BATCH, SEQ = 4, 16, 8, 64
+
+adapter = make_adapter(cfg, num_stages=NUM_STAGES)
+params = adapter.init_params(jax.random.PRNGKey(0))
+optimizer = sgd(0.1, momentum=0.9)
+hp = CurriculumHP(lambda1_max=1.0, lambda2_max=0.5, mu=0.0)
+schedule = RoundRobinSchedule(NUM_STAGES)
+ds = make_lm_dataset(0, 1024, SEQ, cfg.vocab_size)
+rng = np.random.default_rng(0)
+
+# --- memory story ----------------------------------------------------------
+full = estimate_full_memory(adapter, BATCH, SEQ)
+stages = stage_memory_table(adapter, BATCH, SEQ)
+peak = max(e.total for e in stages)
+print(f"peak training memory: full={full.total/1e6:.1f}MB -> "
+      f"progressive={peak/1e6:.1f}MB "
+      f"({100*(1-peak/full.total):.1f}% reduction)\n")
+
+# --- progressive training (Alg. 1) ----------------------------------------
+steps = {t: jax.jit(make_stage_step(adapter, optimizer, hp, t))
+         for t in range(NUM_STAGES)}
+for r in range(ROUNDS):
+    t = schedule.stage(r)
+    frozen, trainable = adapter.split_stage(params, t)
+    opt_state = optimizer.init(trainable)
+    for _ in range(4):
+        sel = rng.integers(0, len(ds), BATCH)
+        toks = ds.tokens[sel]
+        batch = {"inputs": {"tokens": jnp.asarray(toks[:, :-1])},
+                 "labels": jnp.asarray(toks[:, 1:])}
+        opt_state, trainable, m = steps[t](opt_state, trainable, frozen,
+                                           batch, trainable)
+    params = adapter.merge_stage(params, trainable, t)
+    print(f"round {r:3d} | stage {t} | ce {float(m['ce']):.4f} | "
+          f"nHSIC(X;Z) {float(m.get('nhsic_xz', jnp.nan)):.3f} | "
+          f"nHSIC(Y;Z) {float(m.get('nhsic_yz', jnp.nan)):.3f}")
+
+print("\ndone — the full model is assembled in `params`.")

@@ -1,0 +1,65 @@
+"""Pytree checkpointing: flat-path .npz files + JSON metadata + rotation.
+
+Layout: <dir>/ckpt_<step>.npz with leaf paths as keys; lists/dicts round-trip
+via the path encoding from ``repro.common.tree``.  The server checkpoints
+{params, round, stage} so progressive training resumes mid-curriculum.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.common.tree import map_with_path
+
+
+def save_checkpoint(directory: str, step: int, tree, meta: Optional[dict]
+                    = None, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = {}
+
+    def visit(p, leaf):
+        flat[p] = np.asarray(leaf)
+        return leaf
+
+    map_with_path(visit, tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **flat)
+    if meta is not None:
+        with open(path + ".json", "w") as f:
+            json.dump(meta, f)
+    _rotate(directory, keep)
+    return path
+
+
+def load_checkpoint(path: str, like) -> Tuple[Any, Optional[dict]]:
+    """``like``: pytree with the target structure (arrays or ShapeDtype)."""
+    data = np.load(path)
+    out = map_with_path(lambda p, leaf: jax.numpy.asarray(data[p]), like)
+    meta = None
+    if os.path.exists(path + ".json"):
+        with open(path + ".json") as f:
+            meta = json.load(f)
+    return out, meta
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(p for p in os.listdir(directory)
+                   if re.fullmatch(r"ckpt_\d+\.npz", p))
+    return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def _rotate(directory: str, keep: int):
+    ckpts = sorted(p for p in os.listdir(directory)
+                   if re.fullmatch(r"ckpt_\d+\.npz", p))
+    for p in ckpts[:-keep]:
+        os.remove(os.path.join(directory, p))
+        j = os.path.join(directory, p + ".json")
+        if os.path.exists(j):
+            os.remove(j)

@@ -1,0 +1,104 @@
+"""Parameter-definition trees.
+
+A ``ParamDef`` describes one parameter leaf: its shape, dtype, sharding
+``PartitionSpec`` and initializer.  Model builders construct *trees of
+ParamDef* instead of arrays, so a single source of truth yields
+
+  * ``init_params``  — materialized arrays (smoke tests, real training),
+  * ``shape_tree``   — ``jax.ShapeDtypeStruct`` stand-ins (dry-run lowering),
+  * ``spec_tree``    — ``PartitionSpec`` tree (``in_shardings`` for pjit).
+
+Stacking a ParamDef tree over a leading layer axis (for ``lax.scan`` layer
+stacks) simply prepends a dimension to every shape and ``None`` to every spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    dtype: Any = jnp.float32
+    spec: P = P()
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float | None = None    # stddev override (default fan-in)
+
+    def with_prefix(self, n: int) -> "ParamDef":
+        """Prepend a stacked layer axis of size ``n`` (unsharded)."""
+        return dataclasses.replace(
+            self, shape=(n, *self.shape), spec=P(None, *self.spec)
+        )
+
+    def __getitem__(self, idx) -> "ParamDef":
+        """Slice the leading (stacked) axis — mirrors array[s:e] so ParamDef
+        trees can flow through the same split_stage code as arrays."""
+        if isinstance(idx, slice):
+            n = len(range(*idx.indices(self.shape[0])))
+            return dataclasses.replace(self, shape=(n, *self.shape[1:]))
+        raise TypeError("ParamDef only supports slice indexing")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _map(fn: Callable[[ParamDef], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_def)
+
+
+def stack_defs(tree, n: int):
+    """Stack every ParamDef in ``tree`` over a new leading axis of size ``n``."""
+    return _map(lambda d: d.with_prefix(n), tree)
+
+
+def shape_tree(tree):
+    """ParamDef tree -> jax.ShapeDtypeStruct tree (no allocation)."""
+    return _map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def spec_tree(tree):
+    """ParamDef tree -> PartitionSpec tree."""
+    return _map(lambda d: d.spec, tree)
+
+
+def nbytes(tree) -> int:
+    total = 0
+    for d in jax.tree.leaves(tree, is_leaf=is_def):
+        total += int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+    return total
+
+
+def nparams(tree) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(tree, is_leaf=is_def))
+
+
+def _init_leaf(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        scale = d.scale if d.scale is not None else 0.02
+        return (jax.random.normal(key, d.shape) * scale).astype(d.dtype)
+    # default: truncated-normal-ish fan-in scaling on the last-but-one axis
+    if d.scale is not None:
+        scale = d.scale
+    else:
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape) * scale).astype(d.dtype)
+
+
+def init_params(rng, tree):
+    """Materialize a ParamDef tree into actual arrays."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    out = [_init_leaf(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,75 @@
+"""Sharding helpers that degrade gracefully outside a mesh context.
+
+``shard(x, *axes)`` applies a ``with_sharding_constraint`` only when a mesh is
+active (inside ``with mesh:``); on bare CPU (smoke tests) it is the identity.
+This lets model code carry internal sharding annotations without making the
+single-device path depend on a mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _current_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def shard(x, *axes):
+    """Constrain ``x`` to PartitionSpec(*axes) if a mesh is active.
+
+    Under REPRO_SHARDING_POLICY=fsdp the logical batch axes ("pod","data")
+    are widened to include "model" (batch-parallel over the whole mesh,
+    ZeRO-3-style weight gathering)."""
+    import os
+    m = _current_mesh()
+    if m is None:
+        return x
+    if os.environ.get("REPRO_SHARDING_POLICY") == "fsdp":
+        axes = tuple(
+            ("pod", "data", "model")
+            if isinstance(a, (tuple, list)) and set(a) == {"pod", "data"}
+            else a
+            for a in axes)
+    # drop axis names the active mesh doesn't have (e.g. "pod" on 1-pod
+    # mesh) and axes the dim size doesn't divide evenly
+    names = set(m.axis_names)
+
+    def keep(dim_size, a):
+        if a is None:
+            return None
+        cand = tuple(x for x in (a if isinstance(a, (tuple, list)) else (a,))
+                     if x in names)
+        while cand:
+            size = 1
+            for n in cand:
+                size *= m.shape[n]
+            if dim_size % size == 0 and dim_size >= size:
+                return cand if len(cand) > 1 else cand[0]
+            cand = cand[:-1]
+        return None
+
+    spec = P(*[keep(d, a) for d, a in zip(x.shape, axes)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec))
+
+
+def filter_spec(spec: P, mesh) -> P:
+    """Drop axis names not present in ``mesh`` from a PartitionSpec."""
+    names = set(mesh.axis_names)
+
+    def keep(a):
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            kept = tuple(x for x in a if x in names)
+            return kept if kept else None
+        return a if a in names else None
+
+    return P(*[keep(a) for a in spec])

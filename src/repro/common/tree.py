@@ -1,0 +1,81 @@
+"""Pytree path utilities: masks, subtree selection, flattened path maps.
+
+NeuLite trains only a *subtree* of the parameters each round (active block +
+boundary layers + output module).  These helpers build boolean masks and
+select/merge subtrees by path predicates, used by the masked optimizer, the
+sparse aggregation (upload only the active subtree), and the memory model.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def path_str(path) -> str:
+    """jax.tree_util key-path -> 'a/b/0/c' string."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree, is_leaf=None):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn(path_str(p), x), tree, is_leaf=is_leaf
+    )
+
+
+def mask_from_predicate(tree, pred: Callable[[str], bool]):
+    """Boolean pytree: True where ``pred(path)``."""
+    return map_with_path(lambda p, x: bool(pred(p)), tree)
+
+
+def select(tree, mask, fill=None):
+    """Replace leaves where mask is False with ``fill`` (None keeps leaf as-is
+    but zeroed is common for gradients)."""
+    return jax.tree.map(lambda x, m: x if m else fill, tree, mask)
+
+
+def merge(base, update, mask):
+    """Take ``update`` where mask is True, ``base`` elsewhere."""
+    return jax.tree.map(lambda b, u, m: u if m else b, base, update, mask)
+
+
+def where_mask(base, update, mask):
+    """Like merge but works on traced arrays (selects whole leaves)."""
+    return jax.tree.map(lambda b, u, m: u if m else b, base, update, mask)
+
+
+def count_leaves(tree, mask=None) -> int:
+    if mask is None:
+        return len(jax.tree.leaves(tree))
+    flags = jax.tree.leaves(mask)
+    return sum(1 for f in flags if f)
+
+
+def masked_nbytes(tree, mask) -> int:
+    total = 0
+    for leaf, m in zip(jax.tree.leaves(tree), jax.tree.leaves(mask)):
+        if m:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def flatten_paths(tree) -> dict:
+    """tree -> {path_string: leaf}."""
+    out = {}
+
+    def visit(p, x):
+        out[p] = x
+        return x
+
+    map_with_path(visit, tree)
+    return out

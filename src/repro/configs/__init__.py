@@ -1,0 +1,39 @@
+"""Architecture registry: the 10 assigned configs (+ the paper's own models).
+
+``get_config("<id>")`` resolves exact full-scale configs;
+``get_smoke_config`` the reduced same-family CPU variants.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import (deepseek_v2_236b, deepseek_v2_lite_16b,
+                           granite_3_8b, h2o_danube_3_4b,
+                           jamba_1_5_large_398b, llava_next_34b,
+                           musicgen_large, qwen1_5_4b, qwen3_1_7b,
+                           xlstm_1_3b)
+from repro.configs.shapes import (SHAPES, InputShape, cache_part_specs,
+                                  cache_specs, decode_inputs, input_specs,
+                                  label_specs, resolve_config, token_inputs)
+from repro.models.config import ModelConfig
+
+_MODULES = [musicgen_large, xlstm_1_3b, llava_next_34b, granite_3_8b,
+            deepseek_v2_lite_16b, deepseek_v2_236b, h2o_danube_3_4b,
+            qwen1_5_4b, qwen3_1_7b, jamba_1_5_large_398b]
+
+ARCH_IDS = [m.ARCH_ID for m in _MODULES]
+_REGISTRY: Dict[str, object] = {m.ARCH_ID: m for m in _MODULES}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _REGISTRY[arch_id].config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _REGISTRY[arch_id].smoke_config()
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "SHAPES",
+           "InputShape", "input_specs", "token_inputs", "label_specs",
+           "decode_inputs", "cache_specs", "cache_part_specs",
+           "resolve_config"]

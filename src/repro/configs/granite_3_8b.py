@@ -1,0 +1,27 @@
+"""granite-3-8b — dense GQA decoder.
+
+40L, d_model=4096, 32 heads (GQA kv=8), d_ff=12800, vocab=49155.
+[hf:ibm-granite/granite-3.0-2b-base]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "granite-3-8b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=40,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=12800,
+        vocab_size=49155,
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().reduced()

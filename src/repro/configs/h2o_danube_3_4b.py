@@ -1,0 +1,29 @@
+"""h2o-danube-3-4b — llama/mistral-mix dense decoder with sliding-window
+attention.
+
+24L, d_model=3840, 32 heads (GQA kv=8), d_ff=10240, vocab=32000,
+SWA window 4096 (mistral-style) -> native long_500k decode.
+[arXiv:2401.16818]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "h2o-danube-3-4b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=24,
+        d_model=3840,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=10240,
+        vocab_size=32000,
+        window=4096,
+        rope_theta=10_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().reduced()

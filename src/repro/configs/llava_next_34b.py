@@ -1,0 +1,30 @@
+"""llava-next-34b — VLM language backbone (Yi-34B-class dense GQA decoder).
+
+60L, d_model=7168, 56 heads (GQA kv=8), d_ff=20480, vocab=64000.  The vision
+tower (SigLIP/ViT + anyres tiling + projector) is a stub: ``input_specs``
+provides precomputed patch embeddings (anyres: base 576 + 4 tiles × 576 =
+2880 patches).  [hf:llava-hf/llava-v1.6-mistral-7b-hf]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llava-next-34b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="vlm",
+        num_layers=60,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        d_ff=20480,
+        vocab_size=64000,
+        modality="vlm",
+        num_vision_patches=2880,     # anyres: (1 base + 4 tiles) x 576
+        rope_theta=5_000_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().reduced()

@@ -1,0 +1,31 @@
+"""musicgen-large — decoder-only transformer over EnCodec tokens.
+
+48L, d_model=2048, 32 heads (MHA: kv=32), d_ff=8192, vocab=2048 per codebook,
+4 codebook heads (delay-pattern decoding).  The EnCodec conv codec frontend
+is a stub: ``input_specs`` provides precomputed frame embeddings.
+[arXiv:2306.05284]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "musicgen-large"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="audio",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=2048,
+        modality="audio",
+        num_output_heads=4,          # 4 EnCodec codebooks
+        act="gelu",
+        rope_theta=10_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().reduced()

@@ -1,0 +1,28 @@
+"""qwen3-1.7b — dense GQA decoder with per-head QK RMSNorm.
+
+28L, d_model=2048, 16 heads (GQA kv=8), d_ff=6144, vocab=151936.
+[hf:Qwen/Qwen3-8B]
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "qwen3-1.7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=28,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=6144,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().reduced()

@@ -1,0 +1,28 @@
+"""NeuLite core: elastic progressive training (the paper's contribution).
+
+  blocks       — model → T contiguous blocks (BlockPlan)
+  hsic         — nHSIC estimator (Curriculum Mentor's IB surrogate)
+  curriculum   — curriculum-aware losses, Eq. 4 / Eq. 5
+  harmonizer   — progressive.py (surrogate output modules, boundary layers)
+                 + schedule.py (round-robin growth) together implement the
+                 Training Harmonizer
+  progressive  — adapters + stage train-step factory
+  schedule     — plateau freezing / round-robin (Alg. 1) stage schedules
+  memory       — analytic per-stage memory model (Fig. 6, selection)
+"""
+from repro.core.blocks import BlockPlan, make_plan
+from repro.core.curriculum import CurriculumHP, curriculum_loss, lambdas
+from repro.core.progressive import (Adapter, make_adapter,
+                                    make_cnn_adapter, make_full_step,
+                                    make_stage_loss, make_stage_step,
+                                    make_transformer_adapter, neulite_defs)
+from repro.core.schedule import (PlateauSchedule, RoundRobinSchedule,
+                                 SequentialSchedule, StageSchedule)
+
+__all__ = [
+    "BlockPlan", "make_plan", "CurriculumHP", "curriculum_loss", "lambdas",
+    "Adapter", "make_adapter", "make_cnn_adapter", "make_full_step",
+    "make_stage_loss", "make_stage_step", "make_transformer_adapter",
+    "neulite_defs", "PlateauSchedule", "RoundRobinSchedule",
+    "SequentialSchedule", "StageSchedule",
+]

@@ -1,0 +1,88 @@
+"""Curriculum Mentor: curriculum-aware training losses (paper Eq. 4 / Eq. 5).
+
+    L_Θt   = L_CE − λ1,t·nHSIC(X; Z_t) − λ2,t·nHSIC(Y; Z_t)        (Eq. 4)
+    L^r_nt = L_Θt + μ/2 ‖θ_nt − θ_t^l‖²                            (Eq. 5)
+
+λ1 decreases over blocks (early blocks must *retain input information* —
+the inverse data-processing bound I(Y;Z) ≤ I(X;Z) makes I(X;Z) the lever),
+λ2 increases (later blocks sharpen label information).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hsic
+from repro.models.layers import cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class CurriculumHP:
+    lambda1_max: float = 2.0      # nHSIC(X;Z) weight for the first block
+    lambda2_max: float = 1.0      # nHSIC(Y;Z) weight for the last block
+    mu: float = 0.1               # proximal (FedProx) weight, Eq. 5
+    use_hsic_kernel: bool = False # route Grams through the Pallas kernel
+    enabled: bool = True          # ablation switch (w/o CA)
+
+
+def lambdas(hp: CurriculumHP, t: int, num_stages: int):
+    """λ1 decreasing, λ2 increasing in the stage index (paper §Curriculum)."""
+    if num_stages <= 1:
+        return hp.lambda1_max, hp.lambda2_max
+    frac = t / (num_stages - 1)
+    lam1 = hp.lambda1_max * (1.0 - frac)
+    lam2 = hp.lambda2_max * (0.25 + 0.75 * frac)
+    return lam1, lam2
+
+
+def task_ce(logits, labels, cfg, loss_mask=None):
+    """Cross-entropy handling lm / classify / multi-head / vlm layouts."""
+    if getattr(cfg, "task", "lm") == "classify" or logits.ndim == 2:
+        return cross_entropy(logits, labels)
+    if getattr(cfg, "num_output_heads", 1) > 1:
+        return cross_entropy(logits, labels,
+                             None if loss_mask is None else loss_mask[..., None])
+    if logits.shape[1] != labels.shape[1]:      # vlm: labels = text suffix
+        logits = logits[:, -labels.shape[1]:]
+        loss_mask = None
+    return cross_entropy(logits, labels, loss_mask)
+
+
+def curriculum_loss(logits, feats, batch, cfg, hp: CurriculumHP, t: int,
+                    num_stages: int, num_classes: int):
+    """Eq. 4 on one local batch. Returns (loss, metrics)."""
+    labels = batch["labels"]
+    ce = task_ce(logits, labels, cfg, feats.get("loss_mask"))
+    metrics = {"ce": ce}
+    loss = ce
+    if hp.enabled and feats.get("z_proj") is not None:
+        lam1, lam2 = lambdas(hp, t, num_stages)
+        x_feat = hsic.pool_features(feats["x_embed"])
+        z_feat = hsic.pool_features(feats["z_active"])
+        zp_feat = hsic.pool_features(feats["z_proj"])
+        y_feat = hsic.label_features(labels, num_classes)
+        h_xz = hsic.nhsic(x_feat, z_feat, use_kernel=hp.use_hsic_kernel)
+        h_yz = hsic.nhsic(y_feat, zp_feat, kernel_x="linear",
+                          use_kernel=hp.use_hsic_kernel)
+        loss = loss - lam1 * h_xz - lam2 * h_yz
+        metrics.update({"nhsic_xz": h_xz, "nhsic_yz": h_yz,
+                        "lambda1": jnp.asarray(lam1),
+                        "lambda2": jnp.asarray(lam2)})
+    aux = feats.get("aux")
+    if aux is not None and getattr(cfg, "moe", None) is not None:
+        from repro.models.moe import moe_aux_loss
+        loss = loss + moe_aux_loss(aux, cfg.moe)
+    return loss, metrics
+
+
+def proximal_term(trainable, global_ref, mu: float):
+    """μ/2 ‖θ − θ^l‖² over the trainable subtree (Eq. 5)."""
+    if mu == 0.0:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(a.astype(jnp.float32) -
+                                b.astype(jnp.float32)))
+             for a, b in zip(jax.tree.leaves(trainable),
+                             jax.tree.leaves(global_ref)))
+    return 0.5 * mu * sq

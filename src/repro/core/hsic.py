@@ -1,0 +1,102 @@
+"""Normalized HSIC (Hilbert-Schmidt Independence Criterion) estimator.
+
+The Curriculum Mentor's loss (paper Eq. 4) needs nHSIC(X; Z_t) and
+nHSIC(Y; Z_t) per step.  Following the HSIC-bottleneck formulation
+(Ma, Lewis & Kleijn 2020), for centered Gram matrices K̃ = H K H:
+
+    nHSIC(A, B) = tr(K̃_A K̃_B) / (‖K̃_A‖_F ‖K̃_B‖_F)
+
+which is the Hilbert-Schmidt norm of the *normalized* cross-covariance
+operator.  We use a Gaussian kernel with the (differentiable-safe) mean
+heuristic bandwidth for continuous features and a linear kernel for one-hot
+labels.
+
+This module is the pure-jnp reference; ``repro.kernels.hsic_gram`` provides
+the Pallas TPU kernel for the Gram/trace hot loop (same math, tiled for VMEM)
+and ``use_kernel=True`` routes through it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def pairwise_sqdists(x):
+    """x: (B, D) -> (B, B) squared euclidean distances."""
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def gram_rbf(x, sigma: float | None = None):
+    """Gaussian-kernel Gram matrix with mean-distance bandwidth heuristic."""
+    d2 = pairwise_sqdists(x)
+    if sigma is None:
+        # mean heuristic (median is not smooth; mean behaves similarly here
+        # and keeps the loss differentiable w.r.t. activations)
+        sigma2 = jnp.mean(d2) + _EPS
+    else:
+        sigma2 = jnp.asarray(sigma, jnp.float32) ** 2
+    sigma2 = jax.lax.stop_gradient(sigma2)
+    return jnp.exp(-d2 / (2.0 * sigma2))
+
+
+def gram_linear(x):
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+def center(K):
+    """K̃ = H K H with H = I - 11ᵀ/m."""
+    m = K.shape[0]
+    row = K.mean(axis=0, keepdims=True)
+    col = K.mean(axis=1, keepdims=True)
+    return K - row - col + K.mean()
+
+
+def nhsic_from_grams(Kx, Kz):
+    Kxc, Kzc = center(Kx), center(Kz)
+    num = jnp.sum(Kxc * Kzc)                       # tr(Kxc @ Kzc), symmetric
+    den = (jnp.linalg.norm(Kxc) * jnp.linalg.norm(Kzc)) + _EPS
+    return num / den
+
+
+def nhsic(x, z, *, kernel_x: str = "rbf", kernel_z: str = "rbf",
+          use_kernel: bool = False):
+    """nHSIC between batches of features x: (B, Dx), z: (B, Dz) in [0, 1]."""
+    if use_kernel:
+        from repro.kernels.hsic_gram import ops as _ops
+        return _ops.nhsic(x, z, kernel_x=kernel_x, kernel_z=kernel_z)
+    gx = gram_rbf(x) if kernel_x == "rbf" else gram_linear(x)
+    gz = gram_rbf(z) if kernel_z == "rbf" else gram_linear(z)
+    return nhsic_from_grams(gx, gz)
+
+
+# --------------------------------------------------------------------------- #
+# label features for nHSIC(Y; Z)
+# --------------------------------------------------------------------------- #
+def label_features(labels, num_classes: int, max_dim: int = 256):
+    """Map labels to features whose linear Gram approximates label agreement.
+
+    * classification: exact one-hot (num_classes <= max_dim) else bucketed.
+    * LM sequences (B, S) [or (B, S, H)]: per-sequence normalized histogram
+      over ``min(vocab, max_dim)`` buckets — K[i,j] ≈ distributional overlap
+      of the two label sequences (estimator detail, DESIGN.md).
+    """
+    labels = labels.reshape(labels.shape[0], -1)          # (B, S*) or (B, 1)
+    buckets = min(num_classes, max_dim)
+    lb = labels % buckets
+    onehot = jax.nn.one_hot(lb, buckets, dtype=jnp.float32)   # (B, S*, C)
+    feats = onehot.mean(axis=1)
+    return feats / (jnp.linalg.norm(feats, axis=-1, keepdims=True) + _EPS)
+
+
+def pool_features(x):
+    """Pool (B, S, D) / (B, H, W, C) activations to (B, D) for the Gram."""
+    if x.ndim == 2:
+        return x.astype(jnp.float32)
+    axes = tuple(range(1, x.ndim - 1))
+    return x.mean(axis=axes).astype(jnp.float32)

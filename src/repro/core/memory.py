@@ -1,0 +1,120 @@
+"""Analytic training-memory model (paper Fig. 6 + memory-aware selection).
+
+Estimates the peak local-training memory of stage t as
+
+    M(t) = params(all, fwd) + grads(trainable) + opt_state(trainable)
+         + activations(trainable segment) + workspace
+
+Frozen-prefix activations are *not* retained (stop-gradient cuts the
+backward path), which is exactly the NeuLite saving.  The same accounting
+runs on transformer periods and CNN units.  The dry-run's XLA
+``memory_analysis()`` provides the ground-truth counterpart at pod scale
+(EXPERIMENTS.md compares both).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.common import paramdef as PD
+from repro.core.blocks import BlockPlan
+from repro.models import cnn as cnn_mod
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryEstimate:
+    params_bytes: int
+    grads_bytes: int
+    opt_bytes: int
+    act_bytes: int
+
+    @property
+    def total(self) -> int:
+        return (self.params_bytes + self.grads_bytes + self.opt_bytes
+                + self.act_bytes)
+
+    @property
+    def total_gb(self) -> float:
+        return self.total / 1e9
+
+
+def _tx_act_bytes_per_unit(cfg: ModelConfig, batch: int, seq: int) -> int:
+    """Activation bytes one scan period retains for backward (with remat the
+    carry is saved per period; recompute covers the interior — we charge the
+    saved carry plus one period's live working set amortized)."""
+    bytes_el = np.dtype(cfg.dtype).itemsize
+    carry = batch * seq * cfg.d_model * bytes_el
+    # live working set within one period (attention scores dominate at long
+    # seq without flash; with blockwise attention it is O(S · d)):
+    work = 0
+    for kind, ffn in cfg.pattern:
+        if kind == "attn":
+            work += 4 * batch * seq * cfg.d_model * bytes_el
+        elif kind == "mamba":
+            d_in = cfg.ssm.expand * cfg.d_model
+            work += 2 * batch * seq * d_in * bytes_el
+        elif kind in ("mlstm", "slstm"):
+            work += 3 * batch * seq * cfg.d_model * bytes_el
+        if ffn == "mlp":
+            work += 2 * batch * seq * cfg.d_ff * bytes_el
+        elif ffn == "moe":
+            work += 2 * batch * seq * cfg.moe.top_k \
+                * cfg.moe.d_ff_expert * bytes_el // max(cfg.moe.top_k, 1)
+    return carry + work // max(len(cfg.pattern), 1)
+
+
+def _cnn_act_bytes(ccfg: cnn_mod.CNNConfig, batch: int,
+                   unit_range) -> int:
+    metas = cnn_mod.unit_meta(ccfg)
+    hw = ccfg.image_size
+    total = 0
+    for i, (kind, meta) in enumerate(metas):
+        hw_out = hw // meta["stride"]
+        if i in unit_range:
+            total += 3 * batch * hw_out * hw_out * meta["cout"] * 4
+        hw = hw_out
+    return total
+
+
+def estimate_stage_memory(adapter, t: int, batch: int, seq: int = 0,
+                          opt_slots: int = 1) -> MemoryEstimate:
+    """opt_slots: momentum=1 (SGD), adam=2."""
+    frozen_defs, trainable_defs = adapter.split_stage(adapter.defs, t)
+    params_bytes = PD.nbytes(adapter.defs)
+    train_bytes = PD.nbytes(trainable_defs)
+    grads = train_bytes
+    opt = opt_slots * 4 * PD.nparams(trainable_defs)   # fp32 slots
+
+    if adapter.kind == "transformer":
+        cfg: ModelConfig = adapter.cfg
+        (f0, f1), (b0, b1), (a0, a1) = adapter.plan.stage_ranges(t)
+        n_train_units = (b1 - b0) + (a1 - a0)
+        act = n_train_units * _tx_act_bytes_per_unit(cfg, batch, seq)
+    else:
+        (f0, f1), (b0, b1), (a0, a1) = adapter.plan.stage_ranges(t)
+        act = _cnn_act_bytes(adapter.cfg, batch, range(b0, a1))
+    return MemoryEstimate(params_bytes, grads, opt, act)
+
+
+def estimate_full_memory(adapter, batch: int, seq: int = 0,
+                         opt_slots: int = 1) -> MemoryEstimate:
+    params_bytes = PD.nbytes(adapter.defs["model"])
+    grads = params_bytes
+    opt = opt_slots * 4 * PD.nparams(adapter.defs["model"])
+    if adapter.kind == "transformer":
+        cfg = adapter.cfg
+        act = cfg.num_periods * _tx_act_bytes_per_unit(cfg, batch, seq)
+    else:
+        n = adapter.plan.num_units
+        act = _cnn_act_bytes(adapter.cfg, batch, range(0, n))
+    return MemoryEstimate(params_bytes, grads, opt, act)
+
+
+def stage_memory_table(adapter, batch: int, seq: int = 0,
+                       opt_slots: int = 1) -> List[MemoryEstimate]:
+    return [estimate_stage_memory(adapter, t, batch, seq, opt_slots)
+            for t in range(adapter.plan.num_stages)]

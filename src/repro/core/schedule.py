@@ -1,0 +1,82 @@
+"""Stage scheduling: which block trains in round r.
+
+Two policies from the paper:
+
+* ``PlateauSchedule`` — the base progressive paradigm (§Progressive Training):
+  train block t until the server's Progress Evaluation detects convergence
+  (validation-metric plateau), then freeze and grow.
+
+* ``RoundRobinSchedule`` — the Training Harmonizer's parameter co-adaptation
+  paradigm (Alg. 1, line 3: ``t = r mod T``): the model grows every round and
+  cycles back to block 1 after the final block, so blocks continuously
+  co-adapt.  This is NeuLite's default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+class StageSchedule:
+    def stage(self, round_idx: int) -> int:
+        raise NotImplementedError
+
+    def observe(self, round_idx: int, metric: float) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class RoundRobinSchedule(StageSchedule):
+    """Alg. 1: t = r mod T."""
+    num_stages: int
+
+    def stage(self, round_idx: int) -> int:
+        return round_idx % self.num_stages
+
+
+@dataclasses.dataclass
+class SequentialSchedule(StageSchedule):
+    """Fixed-interval progressive training (ProgFed-style / naive PT):
+    stage t for rounds [t*interval, (t+1)*interval), clamped to the last."""
+    num_stages: int
+    rounds_per_stage: int
+
+    def stage(self, round_idx: int) -> int:
+        return min(round_idx // self.rounds_per_stage, self.num_stages - 1)
+
+
+@dataclasses.dataclass
+class PlateauSchedule(StageSchedule):
+    """Progress Evaluation: freeze the active block when the observed metric
+    (e.g. validation loss) stops improving by ``min_delta`` for ``patience``
+    consecutive rounds; then grow to the next block."""
+    num_stages: int
+    patience: int = 3
+    min_delta: float = 1e-3
+    max_rounds_per_stage: int = 50
+
+    _stage: int = 0
+    _best: Optional[float] = None
+    _bad: int = 0
+    _rounds_in_stage: int = 0
+
+    def stage(self, round_idx: int) -> int:
+        return self._stage
+
+    def observe(self, round_idx: int, metric: float) -> None:
+        self._rounds_in_stage += 1
+        improved = self._best is None or metric < self._best - self.min_delta
+        if improved:
+            self._best, self._bad = metric, 0
+        else:
+            self._bad += 1
+        if (self._bad >= self.patience
+                or self._rounds_in_stage >= self.max_rounds_per_stage):
+            if self._stage < self.num_stages - 1:
+                self._stage += 1
+                self._best, self._bad, self._rounds_in_stage = None, 0, 0
+
+    @property
+    def converged_all(self) -> bool:
+        return (self._stage == self.num_stages - 1
+                and self._bad >= self.patience)

@@ -1,0 +1,40 @@
+"""Minimal batching pipeline (shuffle each epoch, fixed batch shapes)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Batcher:
+    """Yields fixed-shape batches; short final batches are wrapped around so
+    every batch has identical shape (jit-friendly)."""
+
+    def __init__(self, dataset, batch_size: int, seed: int = 0,
+                 kind: str = "image"):
+        self.ds = dataset
+        self.bs = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.kind = kind
+
+    def epoch(self):
+        n = len(self.ds)
+        order = self.rng.permutation(n)
+        if n < self.bs:
+            order = np.concatenate(
+                [order, self.rng.choice(n, self.bs - n, replace=True)])
+            n = self.bs
+        for i in range(0, n - self.bs + 1, self.bs):
+            idx = order[i : i + self.bs]
+            yield self.make_batch(idx)
+
+    def make_batch(self, idx):
+        if self.kind == "image":
+            return {"inputs": {"images": self.ds.images[idx]},
+                    "labels": self.ds.labels[idx]}
+        toks = self.ds.tokens[idx]
+        return {"inputs": {"tokens": toks[:, :-1]},
+                "labels": toks[:, 1:]}
+
+    def sample(self, batch_size=None):
+        bs = batch_size or self.bs
+        idx = self.rng.integers(0, len(self.ds), bs)
+        return self.make_batch(idx)

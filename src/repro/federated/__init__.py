@@ -1,0 +1,9 @@
+from repro.federated.aggregation import weighted_average
+from repro.federated.devices import DeviceProfile, sample_devices
+from repro.federated.selection import (memory_feasible, oort_select,
+                                       random_select, tifl_select)
+from repro.federated.server import FLConfig, NeuLiteServer, RoundResult
+
+__all__ = ["weighted_average", "DeviceProfile", "sample_devices",
+           "memory_feasible", "random_select", "tifl_select", "oort_select",
+           "FLConfig", "NeuLiteServer", "RoundResult"]

@@ -1,0 +1,39 @@
+"""Server-side aggregation (paper Eq. 1 / Alg. 1 line 10).
+
+Weighted FedAvg over arbitrary pytrees.  NeuLite uploads only
+``[L_{t-1_b}, θ_t, θ_Op]`` — callers pass the *trainable subtree*, so the
+aggregation (and its communication volume) covers the active block only.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_average(trees: Sequence, weights: Sequence[float]):
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * wi
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def delta(new, old):
+    return jax.tree.map(lambda a, b: a - b, new, old)
+
+
+def add(base, update, scale: float = 1.0):
+    return jax.tree.map(lambda b, u: b + scale * u.astype(b.dtype),
+                        base, update)

@@ -1,0 +1,562 @@
+"""Baseline FL methods the paper compares against (Tables 1-2).
+
+All baselines operate on the CNN zoo (the paper's setting):
+
+  FedAvg       vanilla FL, no memory awareness (reference upper bound —
+               impractical under the memory wall)
+  AllSmall     width-scale the global model to the *minimum* device memory;
+               everyone trains the small model (inclusive)
+  ExclusiveFL  only devices that fit FULL-model training participate
+  DepthFL      depth-scaled sub-models w/ per-depth heads; per-unit aggregation
+  HeteroFL     static width scaling (channel slices) per device tier
+  FedRolex     rolling width scaling — window start advances each round
+  TiFL         tier-based selection (full model → non-inclusive)
+  Oort         utility-based selection (full model → non-inclusive)
+  ProgFed      progressive growth w/o freezing, fixed interval, CE only
+
+Width-slicing uses a uniform per-axis channel-index rule; for concatenating
+architectures (SqueezeNet fire modules) the slice is approximate — which is
+precisely the "width scaling compromises the architecture" failure mode the
+paper reports for SqueezeNet.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.common import paramdef as PD
+from repro.core import make_cnn_adapter, make_full_step
+from repro.core.memory import estimate_full_memory
+from repro.data.loader import Batcher
+from repro.federated import aggregation as agg
+from repro.federated.client import run_local_training_full
+from repro.federated.devices import DeviceProfile, sample_devices
+from repro.federated.selection import (OortState, memory_feasible,
+                                       oort_select, oort_update,
+                                       random_select, tifl_select)
+from repro.models import cnn as cnn_mod
+from repro.models.cnn import CNNConfig
+from repro.models.layers import cross_entropy
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    accuracies: List[float]
+    participation_rate: float
+    name: str
+
+    @property
+    def final_acc(self) -> float:
+        tail = self.accuracies[-10:] if len(self.accuracies) >= 10 \
+            else self.accuracies
+        return float(np.mean(tail)) if tail else 0.0
+
+
+class _Base:
+    """Shared harness: fleet, partitions, eval."""
+
+    name = "base"
+    inclusive = False
+
+    def __init__(self, ccfg: CNNConfig, client_datasets, test_batcher,
+                 flc, data_kind: str = "image"):
+        self.ccfg = ccfg
+        self.flc = flc
+        self.rng = np.random.default_rng(flc.seed)
+        self.adapter = make_cnn_adapter(ccfg, flc.num_stages)
+        self.test_batcher = test_batcher
+        self.batchers = [Batcher(ds, flc.batch_size, seed=flc.seed + i,
+                                 kind=data_kind)
+                         for i, ds in enumerate(client_datasets)]
+        full_mem = estimate_full_memory(self.adapter, flc.batch_size)
+        self.full_req = full_mem.total
+        self.devices = sample_devices(flc.seed, flc.n_devices, self.full_req)
+        self.optimizer = optim.sgd(flc.lr, flc.momentum, flc.weight_decay)
+        self.params = PD.init_params(jax.random.PRNGKey(flc.seed),
+                                     cnn_mod.cnn_defs(ccfg))
+        self._full_step = None
+        self.feasible_hist: List[int] = []
+
+    def full_step(self, ccfg=None, params_like=None):
+        if self._full_step is None:
+            cfg = ccfg or self.ccfg
+
+            def loss(params, batch):
+                return cnn_mod.cnn_loss(params, cfg, batch)
+
+            def step(opt_state, params, batch):
+                lv, grads = jax.value_and_grad(loss)(params, batch)
+                updates, opt_state = self.optimizer.update(grads, opt_state,
+                                                           params)
+                params = optim.apply_updates(params, updates)
+                return opt_state, params, {"loss": lv}
+
+            self._full_step = jax.jit(step)
+        return self._full_step
+
+    def evaluate(self, params=None, ccfg=None, max_batches: int = 8) -> float:
+        cfg = ccfg or self.ccfg
+        p = params if params is not None else self.params
+        fwd = jax.jit(lambda pp, imgs: cnn_mod.cnn_forward(pp, cfg, imgs))
+        correct = total = 0
+        for i, batch in enumerate(self.test_batcher.epoch()):
+            if i >= max_batches:
+                break
+            logits = fwd(p, batch["inputs"]["images"])
+            pred = np.asarray(logits.argmax(-1))
+            correct += int((pred == batch["labels"]).sum())
+            total += len(pred)
+        return correct / max(total, 1)
+
+    def select(self, candidates, r) -> List[int]:
+        return random_select(self.rng, candidates,
+                             self.flc.clients_per_round)
+
+    def candidates(self, r) -> List[int]:
+        return memory_feasible(self.devices, self.full_req)
+
+    def run(self, rounds: int) -> BaselineResult:
+        accs = []
+        for r in range(rounds):
+            cands = self.candidates(r)
+            self.feasible_hist.append(len(cands))
+            selected = self.select(cands, r)
+            self.round(r, selected)
+            accs.append(self.evaluate())
+        pr = float(np.mean(self.feasible_hist)) / self.flc.n_devices
+        return BaselineResult(accs, pr, self.name)
+
+    def round(self, r: int, selected: List[int]):
+        if not selected:
+            return
+        results, weights = [], []
+        for cid in selected:
+            res = run_local_training_full(self.full_step(), self.optimizer,
+                                          self.params, self.batchers[cid],
+                                          self.flc.local_epochs)
+            results.append(res.trainable)
+            weights.append(res.num_samples)
+            self._post_client(cid, res, r)
+        self.params = agg.weighted_average(results, weights)
+
+    def _post_client(self, cid, res, r):
+        pass
+
+
+class FedAvg(_Base):
+    name = "fedavg"
+    inclusive = True
+
+    def candidates(self, r):
+        return [d.device_id for d in self.devices]   # memory-oblivious
+
+
+class ExclusiveFL(_Base):
+    name = "exclusivefl"
+
+
+class TiFL(_Base):
+    name = "tifl"
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.credits: Dict[int, int] = {t: 10 ** 9 for t in range(5)}
+
+    def select(self, candidates, r):
+        return tifl_select(self.rng, self.devices, candidates,
+                           self.flc.clients_per_round, credits=self.credits)
+
+
+class Oort(_Base):
+    name = "oort"
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.oort = OortState()
+
+    def select(self, candidates, r):
+        return oort_select(self.rng, self.devices, candidates,
+                           self.flc.clients_per_round, self.oort, r)
+
+    def _post_client(self, cid, res, r):
+        oort_update(self.oort, cid, res.mean_loss, r)
+
+
+class AllSmall(_Base):
+    name = "allsmall"
+    inclusive = True
+
+    def __init__(self, ccfg, client_datasets, test_batcher, flc, **kw):
+        super().__init__(ccfg, client_datasets, test_batcher, flc, **kw)
+        min_mem = min(d.mem_bytes for d in self.devices)
+        ratio = max(0.125, min(1.0, min_mem / self.full_req))
+        width = float(np.sqrt(ratio))        # memory ~ width², roughly
+        self.small_cfg = dataclasses.replace(ccfg, width_mult=width,
+                                             name=ccfg.name + "-small")
+        self.params = PD.init_params(jax.random.PRNGKey(flc.seed),
+                                     cnn_mod.cnn_defs(self.small_cfg))
+        self._full_step = None
+
+    def full_step(self, ccfg=None, params_like=None):
+        return super().full_step(ccfg=self.small_cfg)
+
+    def evaluate(self, params=None, ccfg=None, max_batches: int = 8):
+        return super().evaluate(params, self.small_cfg, max_batches)
+
+    def candidates(self, r):
+        return [d.device_id for d in self.devices]
+
+
+# --------------------------------------------------------------------------- #
+# width scaling (HeteroFL / FedRolex)
+# --------------------------------------------------------------------------- #
+_WIDTH_LEVELS = (1.0, 0.5, 0.25, 0.125)
+
+
+def _channel_idx(c: int, ratio: float, offset: int) -> np.ndarray:
+    k = max(1, int(round(c * ratio)))
+    return (offset + np.arange(k)) % c
+
+
+def _slice_leaf(path: str, leaf, ratio: float, offset: int,
+                num_classes: int, in_channels: int):
+    """Slice every 'channel-like' axis of a CNN leaf by the width ratio."""
+    arr = np.asarray(leaf)
+    if arr.ndim == 0:
+        return arr, ()
+    axes = []
+    if arr.ndim == 4:                      # conv (k, k, cin, cout)
+        if arr.shape[2] != in_channels:
+            axes.append(2)
+        axes.append(3)
+    elif arr.ndim == 2:                    # linear (cin, cout)
+        axes.append(0)
+        if arr.shape[1] != num_classes:
+            axes.append(1)
+    elif arr.ndim == 1:                    # gn scale/bias or linear bias
+        if arr.shape[0] != num_classes:
+            axes.append(0)
+    idx_map = []
+    for ax in axes:
+        idx = _channel_idx(arr.shape[ax], ratio, offset % arr.shape[ax])
+        arr = np.take(arr, idx, axis=ax)
+        idx_map.append((ax, idx))
+    return arr, tuple(idx_map)
+
+
+def _extract_submodel(params, ratio: float, offset: int, num_classes: int,
+                      in_channels: int):
+    from repro.common.tree import map_with_path
+    sub, maps = {}, {}
+
+    def visit(p, leaf):
+        arr, m = _slice_leaf(p, leaf, ratio, offset, num_classes, in_channels)
+        maps[p] = m
+        return jnp.asarray(arr)
+
+    sub = map_with_path(visit, params)
+    return sub, maps
+
+
+class HeteroFL(_Base):
+    name = "heterofl"
+    inclusive = True
+
+    rolling = False
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.client_ratio = {}
+        for d in self.devices:
+            frac = d.mem_bytes / self.full_req
+            ratio = next((lv for lv in _WIDTH_LEVELS if lv * lv * 1.2 <= frac),
+                         _WIDTH_LEVELS[-1])
+            self.client_ratio[d.device_id] = ratio
+        self._sub_steps: Dict[float, any] = {}
+
+    def candidates(self, r):
+        return [d.device_id for d in self.devices]
+
+    def _offset(self, r: int) -> int:
+        return r if self.rolling else 0
+
+    def _sub_step(self, ratio: float):
+        if ratio not in self._sub_steps:
+            ccfg = dataclasses.replace(self.ccfg, width_mult=ratio,
+                                       name=f"{self.ccfg.name}-w{ratio}")
+
+            def loss(params, batch):
+                return cnn_mod.cnn_loss(params, ccfg, batch)
+
+            def step(opt_state, params, batch):
+                lv, grads = jax.value_and_grad(loss)(params, batch)
+                updates, opt_state = self.optimizer.update(
+                    grads, opt_state, params)
+                params = optim.apply_updates(params, updates)
+                return opt_state, params, {"loss": lv}
+
+            self._sub_steps[ratio] = jax.jit(step)
+        return self._sub_steps[ratio]
+
+    def round(self, r: int, selected: List[int]):
+        if not selected:
+            return
+        from repro.common.tree import flatten_paths
+        flat_global = flatten_paths(self.params)
+        sums = {p: np.zeros_like(np.asarray(v), np.float64)
+                for p, v in flat_global.items()}
+        counts = {p: np.zeros(np.asarray(v).shape, np.float64)
+                  for p, v in flat_global.items()}
+        offset = self._offset(r)
+        for cid in selected:
+            ratio = self.client_ratio[cid]
+            sub, maps = _extract_submodel(self.params, ratio, offset,
+                                          self.ccfg.num_classes,
+                                          self.ccfg.in_channels)
+            res = run_local_training_full(
+                self._sub_step(ratio), self.optimizer, sub,
+                self.batchers[cid], self.flc.local_epochs)
+            flat_sub = flatten_paths(res.trainable)
+            for p, leaf in flat_sub.items():
+                arr = np.asarray(leaf, np.float64)
+                tgt_s, tgt_c = sums[p], counts[p]
+                sl = [slice(None)] * arr.ndim
+                view_s, view_c = tgt_s, tgt_c
+                # scatter back through the per-axis index maps
+                idxs = maps[p]
+                if idxs:
+                    # open-mesh the per-axis index arrays so joint advanced
+                    # indexing selects the outer product of channels
+                    full_ix = [slice(None)] * tgt_s.ndim
+                    k = len(idxs)
+                    for j, (ax, m) in enumerate(idxs):
+                        shape = [1] * k
+                        shape[j] = len(m)
+                        full_ix[ax] = m.reshape(shape)
+                    np.add.at(tgt_s, tuple(full_ix), arr)
+                    np.add.at(tgt_c, tuple(full_ix), 1.0)
+                else:
+                    tgt_s += arr
+                    tgt_c += 1.0
+        new_flat = {}
+        for p, v in flat_global.items():
+            base = np.asarray(v, np.float64)
+            c = counts[p]
+            avg = np.where(c > 0, sums[p] / np.maximum(c, 1), base)
+            new_flat[p] = avg.astype(np.asarray(v).dtype)
+        # rebuild the tree
+        from repro.common.tree import map_with_path
+        self.params = map_with_path(lambda p, _: jnp.asarray(new_flat[p]),
+                                    self.params)
+
+
+class FedRolex(HeteroFL):
+    name = "fedrolex"
+    rolling = True
+
+
+# --------------------------------------------------------------------------- #
+# depth scaling (DepthFL / ProgFed)
+# --------------------------------------------------------------------------- #
+class DepthFL(_Base):
+    """Depth-scaled sub-models: D depth levels (== plan bounds prefixes),
+    each with its own classifier head; per-unit weighted aggregation."""
+    name = "depthfl"
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.metas = cnn_mod.unit_meta(self.ccfg)
+        self.bounds = list(self.adapter.plan.bounds)
+        self.depth_ends = [e for _, e in self.bounds]
+        heads = []
+        for e in self.depth_ends:
+            cout = self.metas[e - 1][1]["cout"]
+            heads.append(PD.init_params(
+                jax.random.PRNGKey(self.flc.seed + e),
+                cnn_mod.linear_defs(cout, self.ccfg.num_classes)))
+        self.heads = heads
+        # per-client depth level by memory (prefix fraction of full req)
+        self.client_level = {}
+        for d in self.devices:
+            frac = d.mem_bytes / self.full_req
+            lvl = 0
+            for li in range(len(self.depth_ends)):
+                if frac >= (li + 1) / len(self.depth_ends) * 1.1:
+                    lvl = li
+            self.client_level[d.device_id] = lvl
+        self._steps: Dict[int, any] = {}
+
+    def candidates(self, r):
+        # DepthFL's PR < 100%: devices below the smallest prefix skip
+        min_req = self.full_req / len(self.depth_ends) * 0.8
+        return [d.device_id for d in self.devices
+                if d.mem_bytes >= min_req]
+
+    def _step(self, lvl: int):
+        if lvl not in self._steps:
+            end = self.depth_ends[lvl]
+            metas = self.metas[:end]
+            ccfg = self.ccfg
+
+            def loss(bundle, batch):
+                x = cnn_mod.cnn_apply_units(ccfg, metas, bundle["units"],
+                                            batch["inputs"]["images"])
+                x = jnp.mean(x, axis=(1, 2))
+                logits = cnn_mod.linear(bundle["head"], x)
+                return cross_entropy(logits, batch["labels"])
+
+            def step(opt_state, bundle, batch):
+                lv, grads = jax.value_and_grad(loss)(bundle, batch)
+                updates, opt_state = self.optimizer.update(grads, opt_state,
+                                                           bundle)
+                bundle = optim.apply_updates(bundle, updates)
+                return opt_state, bundle, {"loss": lv}
+
+            self._steps[lvl] = jax.jit(step)
+        return self._steps[lvl]
+
+    def round(self, r: int, selected: List[int]):
+        if not selected:
+            return
+        unit_updates: List[List] = [[] for _ in self.metas]
+        unit_weights: List[List] = [[] for _ in self.metas]
+        head_updates: Dict[int, list] = {}
+        for cid in selected:
+            lvl = self.client_level[cid]
+            end = self.depth_ends[lvl]
+            bundle = {"units": self.params["units"][:end],
+                      "head": self.heads[lvl]}
+            res = run_local_training_full(self._step(lvl), self.optimizer,
+                                          bundle, self.batchers[cid],
+                                          self.flc.local_epochs)
+            for u in range(end):
+                unit_updates[u].append(res.trainable["units"][u])
+                unit_weights[u].append(res.num_samples)
+            head_updates.setdefault(lvl, []).append(
+                (res.trainable["head"], res.num_samples))
+        units = list(self.params["units"])
+        for u in range(len(units)):
+            if unit_updates[u]:
+                units[u] = agg.weighted_average(unit_updates[u],
+                                                unit_weights[u])
+        self.params = dict(self.params)
+        self.params["units"] = units
+        for lvl, ups in head_updates.items():
+            self.heads[lvl] = agg.weighted_average(
+                [t for t, _ in ups], [w for _, w in ups])
+        # deepest head doubles as the global model's head for evaluation
+        self.params["head"] = self.heads[-1]
+
+
+class ProgFed(_Base):
+    """ProgFed (Wang et al. 2022): progressive *growth* without freezing —
+    stage s trains units [0, end_s) jointly with a stage head; growth every
+    ``rounds_per_stage`` rounds; plain CE loss."""
+    name = "progfed"
+    inclusive = True
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.metas = cnn_mod.unit_meta(self.ccfg)
+        self.bounds = list(self.adapter.plan.bounds)
+        self.depth_ends = [e for _, e in self.bounds]
+        self.heads = []
+        for e in self.depth_ends:
+            cout = self.metas[e - 1][1]["cout"]
+            self.heads.append(PD.init_params(
+                jax.random.PRNGKey(self.flc.seed + 17 + e),
+                cnn_mod.linear_defs(cout, self.ccfg.num_classes)))
+        self._steps: Dict[int, any] = {}
+
+    def stage(self, r: int) -> int:
+        return min(r // self.flc.rounds_per_stage, len(self.depth_ends) - 1)
+
+    def candidates(self, r):
+        # memory need grows with the stage (no freezing!)
+        s = self.stage(r)
+        req = self.full_req * self.depth_ends[s] / len(self.metas)
+        return memory_feasible(self.devices, int(req))
+
+    def _step(self, lvl: int):
+        if lvl not in self._steps:
+            end = self.depth_ends[lvl]
+            metas = self.metas[:end]
+            ccfg = self.ccfg
+
+            def loss(bundle, batch):
+                x = cnn_mod.cnn_apply_units(ccfg, metas, bundle["units"],
+                                            batch["inputs"]["images"])
+                x = jnp.mean(x, axis=(1, 2))
+                logits = cnn_mod.linear(bundle["head"], x)
+                return cross_entropy(logits, batch["labels"])
+
+            def step(opt_state, bundle, batch):
+                lv, grads = jax.value_and_grad(loss)(bundle, batch)
+                updates, opt_state = self.optimizer.update(grads, opt_state,
+                                                           bundle)
+                bundle = optim.apply_updates(bundle, updates)
+                return opt_state, bundle, {"loss": lv}
+
+            self._steps[lvl] = jax.jit(step)
+        return self._steps[lvl]
+
+    def round(self, r: int, selected: List[int]):
+        if not selected:
+            return
+        s = self.stage(r)
+        end = self.depth_ends[s]
+        results, weights = [], []
+        for cid in selected:
+            bundle = {"units": self.params["units"][:end],
+                      "head": self.heads[s]}
+            res = run_local_training_full(self._step(s), self.optimizer,
+                                          bundle, self.batchers[cid],
+                                          self.flc.local_epochs)
+            results.append(res.trainable)
+            weights.append(res.num_samples)
+        avg = agg.weighted_average(results, weights)
+        units = list(self.params["units"])
+        units[:end] = avg["units"]
+        self.params = dict(self.params)
+        self.params["units"] = units
+        self.heads[s] = avg["head"]
+        self.params["head"] = self.heads[-1] if s == len(self.depth_ends) - 1 \
+            else self.params["head"]
+
+    def evaluate(self, params=None, ccfg=None, max_batches: int = 8):
+        # evaluate prefix model at the current stage's head
+        s = self.stage(len(self.feasible_hist) - 1) if self.feasible_hist \
+            else 0
+        end = self.depth_ends[s]
+        metas = self.metas[:end]
+        fwd = jax.jit(lambda units, head, imgs: cnn_mod.linear(
+            head, jnp.mean(cnn_mod.cnn_apply_units(self.ccfg, metas, units,
+                                                   imgs), axis=(1, 2))))
+        correct = total = 0
+        for i, batch in enumerate(self.test_batcher.epoch()):
+            if i >= max_batches:
+                break
+            logits = fwd(self.params["units"][:end], self.heads[s],
+                         batch["inputs"]["images"])
+            pred = np.asarray(logits.argmax(-1))
+            correct += int((pred == batch["labels"]).sum())
+            total += len(pred)
+        return correct / max(total, 1)
+
+
+BASELINES = {
+    "fedavg": FedAvg,
+    "exclusivefl": ExclusiveFL,
+    "allsmall": AllSmall,
+    "depthfl": DepthFL,
+    "heterofl": HeteroFL,
+    "fedrolex": FedRolex,
+    "tifl": TiFL,
+    "oort": Oort,
+    "progfed": ProgFed,
+}

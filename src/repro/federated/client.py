@@ -1,0 +1,52 @@
+"""Client-side local training (paper: 5 local epochs of SGD, Eq. 5 loss)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.data.loader import Batcher
+
+
+@dataclasses.dataclass
+class ClientResult:
+    trainable: Any
+    num_samples: int
+    mean_loss: float
+    num_batches: int
+
+
+def run_local_training(step_fn: Callable, optimizer, trainable, frozen,
+                       batcher: Batcher, local_epochs: int,
+                       global_ref=None) -> ClientResult:
+    """Run E local epochs; ``step_fn`` is a (jitted) stage or full step."""
+    opt_state = optimizer.init(trainable)
+    gref = global_ref if global_ref is not None else trainable
+    losses, nb = [], 0
+    for _ in range(local_epochs):
+        for batch in batcher.epoch():
+            opt_state, trainable, metrics = step_fn(
+                opt_state, trainable, frozen, batch, gref)
+            losses.append(float(metrics["loss"]))
+            nb += 1
+    return ClientResult(trainable=trainable, num_samples=len(batcher.ds),
+                        mean_loss=float(np.mean(losses)) if losses else 0.0,
+                        num_batches=nb)
+
+
+def run_local_training_full(step_fn: Callable, optimizer, params,
+                            batcher: Batcher,
+                            local_epochs: int) -> ClientResult:
+    """Full-model local training (FedAvg-style baselines)."""
+    opt_state = optimizer.init(params)
+    losses, nb = [], 0
+    for _ in range(local_epochs):
+        for batch in batcher.epoch():
+            opt_state, params, metrics = step_fn(opt_state, params, batch)
+            losses.append(float(metrics["loss"]))
+            nb += 1
+    return ClientResult(trainable=params, num_samples=len(batcher.ds),
+                        mean_loss=float(np.mean(losses)) if losses else 0.0,
+                        num_batches=nb)

@@ -1,0 +1,51 @@
+"""Simulated device fleet: memory budgets + relative compute speeds.
+
+The paper establishes a 100-device FL system whose memory budgets follow
+profiled hardware configurations (off-the-shelf devices, 4-16 GB RAM, with
+only part of RAM available to training).  We reproduce that as a categorical
+mix of device tiers; budgets are expressed in *bytes available for training*
+and scale down with the experiment (`budget_scale`) so the tiny CPU models
+see the same *relative* memory wall the paper's testbed does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    device_id: int
+    mem_bytes: int          # memory available for local training
+    speed: float            # relative compute throughput (1.0 = median)
+
+
+# tier mix modeled on the paper's hardware profiles (Jetson-class to phones)
+_TIERS = [
+    # (fraction of fleet, available-memory fraction of the "full" budget, speed)
+    (0.25, 0.25, 0.5),
+    (0.30, 0.45, 0.8),
+    (0.25, 0.65, 1.0),
+    (0.12, 0.85, 1.4),
+    (0.08, 1.10, 2.0),
+]
+
+
+def sample_devices(seed: int, n_devices: int,
+                   full_model_bytes: int) -> List[DeviceProfile]:
+    """``full_model_bytes`` is the peak memory of FULL-model training; tiers
+    are budgeted relative to it so the memory wall binds by construction."""
+    rng = np.random.default_rng(seed)
+    fracs = np.array([t[0] for t in _TIERS])
+    tier_ids = rng.choice(len(_TIERS), size=n_devices, p=fracs / fracs.sum())
+    out = []
+    for i, tid in enumerate(tier_ids):
+        _, mem_frac, speed = _TIERS[tid]
+        jitter = rng.uniform(0.9, 1.1)
+        out.append(DeviceProfile(
+            device_id=i,
+            mem_bytes=int(full_model_bytes * mem_frac * jitter),
+            speed=float(speed * rng.uniform(0.85, 1.15))))
+    return out

@@ -1,0 +1,95 @@
+"""Client selection policies.
+
+* NeuLite / inclusive methods: uniform random among devices whose memory fits
+  the *current stage's* requirement (paper: "selects 10% devices based on
+  their available memory").
+* TiFL (Chai et al. 2020): tier devices by profiled round time, pick a tier
+  (credit-based), then sample within it.
+* Oort (Lai et al. 2021): utility = statistical utility (recent loss) ×
+  (T_desired / T_i)^penalty system factor, ε-greedy exploration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.federated.devices import DeviceProfile
+
+
+def memory_feasible(devices: Sequence[DeviceProfile],
+                    required_bytes: int) -> List[int]:
+    return [d.device_id for d in devices if d.mem_bytes >= required_bytes]
+
+
+def random_select(rng: np.random.Generator, candidates: Sequence[int],
+                  k: int) -> List[int]:
+    if len(candidates) == 0:
+        return []
+    k = min(k, len(candidates))
+    return list(rng.choice(np.asarray(candidates), size=k, replace=False))
+
+
+# --------------------------------------------------------------------------- #
+# TiFL
+# --------------------------------------------------------------------------- #
+def tifl_select(rng: np.random.Generator, devices: Sequence[DeviceProfile],
+                candidates: Sequence[int], k: int, n_tiers: int = 5,
+                credits: Dict[int, int] | None = None) -> List[int]:
+    cand = [d for d in devices if d.device_id in set(candidates)]
+    if not cand:
+        return []
+    times = np.array([1.0 / d.speed for d in cand])
+    order = np.argsort(times)
+    tiers = np.array_split(order, n_tiers)
+    tier_ids = [t for t in range(n_tiers) if len(tiers[t])
+                and (credits is None or credits.get(t, 1) > 0)]
+    if not tier_ids:
+        tier_ids = [t for t in range(n_tiers) if len(tiers[t])]
+    tier = tier_ids[int(rng.integers(len(tier_ids)))]
+    if credits is not None:
+        credits[tier] = credits.get(tier, 1) - 1
+    pool = [cand[i].device_id for i in tiers[tier]]
+    return random_select(rng, pool, k)
+
+
+# --------------------------------------------------------------------------- #
+# Oort
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class OortState:
+    util: Dict[int, float] = dataclasses.field(default_factory=dict)
+    last_round: Dict[int, int] = dataclasses.field(default_factory=dict)
+    epsilon: float = 0.3
+    t_desired: float = 1.0
+    alpha: float = 2.0
+
+
+def oort_update(state: OortState, device_id: int, stat_loss: float,
+                round_idx: int):
+    state.util[device_id] = float(stat_loss)
+    state.last_round[device_id] = round_idx
+
+
+def oort_select(rng: np.random.Generator, devices: Sequence[DeviceProfile],
+                candidates: Sequence[int], k: int, state: OortState,
+                round_idx: int) -> List[int]:
+    if not candidates:
+        return []
+    k = min(k, len(candidates))
+    n_exploit = int(round(k * (1 - state.epsilon)))
+    dev_map = {d.device_id: d for d in devices}
+    explored = [c for c in candidates if c in state.util]
+    scores = []
+    for c in explored:
+        sys_f = min(1.0, (state.t_desired * dev_map[c].speed)) ** state.alpha
+        staleness = np.sqrt(0.1 * (round_idx - state.last_round.get(c, 0) + 1))
+        scores.append(state.util[c] * sys_f + staleness)
+    chosen: List[int] = []
+    if explored and n_exploit > 0:
+        top = np.argsort(scores)[::-1][:n_exploit]
+        chosen = [explored[i] for i in top]
+    rest = [c for c in candidates if c not in chosen]
+    chosen += random_select(rng, rest, k - len(chosen))
+    return chosen

@@ -1,0 +1,193 @@
+"""NeuLite FL server: progressive rounds with memory-aware participation.
+
+Implements the full workflow of paper Fig. 1 + Alg. 1:
+  1. Model Construction  — stage t from the schedule; split params into
+                           (frozen, trainable=[L_{t-1}, θ_t, θ_Op]).
+  2. Local Training      — selected clients run E epochs of Eq. 5.
+  3. Model Aggregation   — weighted FedAvg over the trainable subtree.
+  4. Progress Evaluation — validation metric feeds the plateau schedule.
+  5. Model Growing       — next stage (round-robin growth by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.core import (CurriculumHP, PlateauSchedule, RoundRobinSchedule,
+                        SequentialSchedule, make_stage_step)
+from repro.core.memory import estimate_full_memory, estimate_stage_memory
+from repro.data.loader import Batcher
+from repro.federated import aggregation as agg
+from repro.federated.client import run_local_training
+from repro.federated.devices import sample_devices
+from repro.federated.selection import memory_feasible, random_select
+
+
+@dataclasses.dataclass
+class FLConfig:
+    n_devices: int = 100
+    clients_per_round: int = 10
+    local_epochs: int = 5
+    batch_size: int = 32
+    lr: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    num_stages: int = 4
+    boundary_units: int = 1
+    schedule: str = "round_robin"       # round_robin | plateau | sequential
+    rounds_per_stage: int = 10          # for sequential
+    curriculum: bool = True             # ablation: w/o CA
+    co_adaptation: bool = True          # ablation: w/o PC (plateau + no
+                                        # boundary units + no surrogates)
+    mu: float = 0.01
+    lambda1: float = 2.0
+    lambda2: float = 1.0
+    alpha: float = 1.0                  # Dirichlet concentration
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RoundResult:
+    round_idx: int
+    stage: int
+    n_selected: int
+    n_feasible: int
+    mean_loss: float
+    upload_bytes: int
+    sim_time: float
+    test_acc: Optional[float] = None
+
+
+class NeuLiteServer:
+    def __init__(self, adapter, client_datasets: List, flc: FLConfig,
+                 test_batcher: Optional[Batcher] = None,
+                 data_kind: str = "image"):
+        self.adapter = adapter
+        self.flc = flc
+        self.rng = np.random.default_rng(flc.seed)
+        self.params = adapter.init_params(jax.random.PRNGKey(flc.seed))
+        self.optimizer = optim.sgd(flc.lr, flc.momentum, flc.weight_decay)
+        self.hp = CurriculumHP(lambda1_max=flc.lambda1,
+                               lambda2_max=flc.lambda2, mu=flc.mu,
+                               enabled=flc.curriculum)
+        self.test_batcher = test_batcher
+        self.batchers = [Batcher(ds, flc.batch_size, seed=flc.seed + i,
+                                 kind=data_kind)
+                         for i, ds in enumerate(client_datasets)]
+        T = adapter.plan.num_stages
+        if not flc.co_adaptation:
+            self.schedule = SequentialSchedule(T, flc.rounds_per_stage)
+        elif flc.schedule == "round_robin":
+            self.schedule = RoundRobinSchedule(T)
+        elif flc.schedule == "plateau":
+            self.schedule = PlateauSchedule(T)
+        else:
+            self.schedule = SequentialSchedule(T, flc.rounds_per_stage)
+        full_mem = estimate_full_memory(adapter, flc.batch_size,
+                                        seq=self._seq_len())
+        self.devices = sample_devices(flc.seed, flc.n_devices, full_mem.total)
+        self._step_cache: Dict[int, Any] = {}
+        self.history: List[RoundResult] = []
+
+    # ------------------------------------------------------------------ #
+    def _seq_len(self) -> int:
+        """Sequence length for the memory model (0 for image tasks)."""
+        ds = self.batchers[0].ds if self.batchers else None
+        toks = getattr(ds, "tokens", None)
+        return 0 if toks is None else toks.shape[1] - 1
+
+    def _stage_step(self, t: int):
+        if t not in self._step_cache:
+            self._step_cache[t] = jax.jit(make_stage_step(
+                self.adapter, self.optimizer, self.hp, t))
+        return self._step_cache[t]
+
+    def stage_mem_requirement(self, t: int) -> int:
+        return estimate_stage_memory(self.adapter, t, self.flc.batch_size,
+                                     seq=self._seq_len()).total
+
+    # ------------------------------------------------------------------ #
+    def run_round(self, r: int) -> RoundResult:
+        flc = self.flc
+        t = self.schedule.stage(r)
+        req = self.stage_mem_requirement(t)
+        feasible = memory_feasible(self.devices, req)
+        selected = random_select(self.rng, feasible, flc.clients_per_round)
+
+        frozen, g_trainable = self.adapter.split_stage(self.params, t)
+        step_fn = self._stage_step(t)
+        results, weights = [], []
+        sim_times = []
+        dev_map = {d.device_id: d for d in self.devices}
+        for cid in selected:
+            res = run_local_training(
+                step_fn, self.optimizer, g_trainable, frozen,
+                self.batchers[cid], flc.local_epochs, global_ref=g_trainable)
+            results.append(res)
+            weights.append(res.num_samples)
+            sim_times.append(res.num_batches / dev_map[cid].speed)
+
+        if results:
+            new_trainable = agg.weighted_average(
+                [res.trainable for res in results], weights)
+            self.params = self.adapter.merge_stage(self.params,
+                                                   new_trainable, t)
+            upload = agg.tree_bytes(new_trainable) * len(results)
+            mean_loss = float(np.mean([res.mean_loss for res in results]))
+        else:
+            upload, mean_loss = 0, float("nan")
+
+        acc = None
+        if self.test_batcher is not None:
+            acc = self.evaluate()
+            self.schedule.observe(r, 1.0 - acc)
+        else:
+            self.schedule.observe(r, mean_loss)
+
+        rr = RoundResult(round_idx=r, stage=t, n_selected=len(selected),
+                         n_feasible=len(feasible), mean_loss=mean_loss,
+                         upload_bytes=upload,
+                         sim_time=float(max(sim_times)) if sim_times else 0.0,
+                         test_acc=acc)
+        self.history.append(rr)
+        return rr
+
+    def run(self, rounds: int, log_every: int = 0) -> List[RoundResult]:
+        for r in range(rounds):
+            rr = self.run_round(r)
+            if log_every and (r % log_every == 0):
+                print(f"round {r:4d} stage {rr.stage} "
+                      f"loss {rr.mean_loss:.4f} acc {rr.test_acc} "
+                      f"feasible {rr.n_feasible}/{self.flc.n_devices}")
+        return self.history
+
+    # ------------------------------------------------------------------ #
+    def evaluate(self, max_batches: int = 8) -> float:
+        correct = total = 0
+        fwd = jax.jit(self.adapter.forward_eval)
+        for i, batch in enumerate(self.test_batcher.epoch()):
+            if i >= max_batches:
+                break
+            logits = fwd(self.params, batch["inputs"])
+            if logits.ndim == 2:
+                pred = np.asarray(logits.argmax(-1))
+                correct += int((pred == batch["labels"]).sum())
+                total += len(pred)
+            else:
+                pred = np.asarray(logits.argmax(-1))
+                labels = batch["labels"]
+                correct += int((pred == labels).sum())
+                total += int(np.prod(labels.shape))
+        return correct / max(total, 1)
+
+    @property
+    def participation_rate(self) -> float:
+        if not self.history:
+            return 0.0
+        return float(np.mean([h.n_feasible / self.flc.n_devices
+                              for h in self.history]))

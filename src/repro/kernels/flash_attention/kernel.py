@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (causal + sliding window, GQA-aware).
+
+TPU adaptation of the paper's training hot loop (DESIGN.md §6): blockwise
+streaming softmax so the working set is O(block_q · block_kv) in VMEM and the
+(S×S) score matrix is never materialized in HBM.  Block sizes default to
+128×128 — MXU-aligned (128-lane) tiles.
+
+Grid: (B, H, num_q_blocks, num_kv_blocks); the kv axis is the innermost,
+sequentially-executed dimension, carrying the running (m, l, acc) statistics
+in VMEM scratch.  Fully-masked (q, kv) block pairs are skipped via
+``pl.when`` — for causal attention this halves the block work; for a
+sliding window of W it bounds work to O(S·W).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, block_q: int,
+                  block_kv: int, num_kv: int, seq_q: int, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # static-ish skip: with a dynamic grid index we can still branch
+    causal_skip = causal and True
+    run = jnp.asarray(True)
+    if causal:
+        # kv block entirely above the diagonal -> skip
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window > 0:
+        # kv block entirely below the window of the *last* q row -> skip
+        run = jnp.logical_and(
+            run, k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bkv, d)
+        s = q @ k.T                                       # (bq, bkv)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_kv), 1)
+        mask = kpos < seq_kv
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        # rows with no valid kv yet: keep exp(NEG_INF - NEG_INF)=1 out
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == num_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.maximum(l, 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_kv: int = 128,
+                         interpret: bool = True):
+    """q: (B, H, Sq, D); k, v: (B, H, Skv, D) — kv heads already expanded or
+    equal to H via the GQA index map in ``ops``.  Returns (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    pad_q = (-Sq) % block_q
+    pad_kv = (-Skv) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_kv
+    nq, nkv = Sq_p // block_q, Skv_p // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(D), causal=causal,
+        window=window, block_q=block_q, block_kv=block_kv, num_kv=nkv,
+        seq_q=Sq, seq_kv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            # (bq,) running max, (bq,) running sum, (bq, d) accumulator —
+            # VMEM-resident across the sequential kv grid dimension
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,78 @@
+"""Jit'd public wrapper around the flash-attention Pallas kernel.
+
+Handles layout (B,S,H,D) -> (B,H,S,D), GQA head expansion, block-size
+selection, and the interpret-mode switch (CPU container: interpret=True;
+on real TPU backends interpret=False compiles to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def _flash_fwd_impl(q, k, v, causal, window, block_q, block_kv, interpret):
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qt = q.transpose(0, 2, 1, 3)                      # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)                      # (B, KV, Skv, D)
+    vt = v.transpose(0, 2, 1, 3)
+    if G > 1:
+        kt = jnp.repeat(kt, G, axis=1)
+        vt = jnp.repeat(vt, G, axis=1)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, block_q, block_kv, interpret):
+    return _flash_fwd_impl(q, k, v, causal, window, block_q, block_kv,
+                           interpret)
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_kv, interpret):
+    return _flash(q, k, v, causal, window, block_q, block_kv, interpret), \
+        (q, k, v)
+
+
+def _flash_bwd(causal, window, block_q, block_kv, interpret, res, g):
+    """Backward via the reference attention VJP.
+
+    The Pallas kernel covers the forward hot loop; the backward runs the
+    (recomputation-based) reference VJP — numerically identical gradients,
+    O(S²) backward workspace.  A fused flash backward kernel is the
+    documented follow-up (DESIGN.md §6)."""
+    from repro.kernels.flash_attention.ref import attention_ref
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D); H % KV == 0.
+    Returns (B, Sq, H, D).  Differentiable (custom VJP, see _flash_bwd)."""
+    return _flash(q, k, v, causal, window, block_q, block_kv, interpret)

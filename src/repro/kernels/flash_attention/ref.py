@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Grouped (GQA) causal / sliding-window scaled-dot-product attention,
+numerically in float32.  This is the correctness reference the Pallas
+kernel is validated against (interpret mode) for every shape/dtype sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D); H % KV == 0.
+
+    Returns (B, Sq, H, D) in q.dtype."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) / jnp.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

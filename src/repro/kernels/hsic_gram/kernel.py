@@ -1,0 +1,135 @@
+"""Pallas TPU kernels for the Curriculum Mentor's nHSIC estimate.
+
+The HSIC bottleneck adds two Gram-matrix computations per step — an
+O(B²·D) matmul-shaped workload plus elementwise kernel evaluation.  On GPU
+the paper's reference computes dense Grams in HBM; the TPU-native version
+tiles the computation over (block_m × block_n) VMEM blocks feeding the MXU
+(DESIGN.md §6):
+
+  * ``rbf_gram``   — fused ‖xi−xj‖² + exp(−d²/2σ²) per block; the x·xᵀ block
+                     matmul runs on the MXU, the exp on the VPU, and the
+                     (B, B) distance matrix never round-trips to HBM
+                     unexponentiated.
+  * ``gram_stats`` — fused reduction pass producing Σ KxcKzc, ‖Kxc‖², ‖Kzc‖²
+                     given per-row/col means (centering folded into the
+                     elementwise pass, one HBM read for both matrices).
+
+Grid is 2-D over Gram blocks; D is loaded whole per block (activations are
+projected to ≤ a few hundred dims before HSIC, so a (block, D) tile fits
+VMEM comfortably: 128×512×4B = 256 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------- #
+# fused RBF gram
+# --------------------------------------------------------------------------- #
+def _rbf_gram_kernel(xr_ref, xc_ref, s2_ref, o_ref, *, linear: bool):
+    xr = xr_ref[...].astype(jnp.float32)            # (bm, D)
+    xc = xc_ref[...].astype(jnp.float32)            # (bn, D)
+    dot = xr @ xc.T                                  # MXU
+    if linear:
+        o_ref[...] = dot
+        return
+    sr = jnp.sum(xr * xr, axis=1)[:, None]
+    sc = jnp.sum(xc * xc, axis=1)[None, :]
+    d2 = jnp.maximum(sr + sc - 2.0 * dot, 0.0)
+    o_ref[...] = jnp.exp(-d2 / (2.0 * s2_ref[0]))
+
+
+def gram_pallas(x, sigma2, *, linear: bool = False, block: int = 128,
+                interpret: bool = True):
+    """x: (B, D) -> (B, B) Gram (float32)."""
+    B, D = x.shape
+    block = min(block, B)
+    pad = (-B) % block
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    Bp = B + pad
+    nb = Bp // block
+    s2 = jnp.asarray([sigma2], jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_rbf_gram_kernel, linear=linear),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, D), lambda i, j: (j, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Bp), jnp.float32),
+        interpret=interpret,
+    )(x, x, s2)
+    return out[:B, :B]
+
+
+# --------------------------------------------------------------------------- #
+# fused centered-trace statistics
+# --------------------------------------------------------------------------- #
+def _stats_kernel(kx_ref, kz_ref, rx_ref, cx_ref, rz_ref, cz_ref, mx_ref,
+                  mz_ref, o_ref, acc_ref, *, nb: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kx = kx_ref[...]
+    kz = kz_ref[...]
+    # centered blocks: K - rowmean(col j) - colmean(row i) + total mean
+    kxc = kx - rx_ref[...][:, None] - cx_ref[...][None, :] + mx_ref[0]
+    kzc = kz - rz_ref[...][:, None] - cz_ref[...][None, :] + mz_ref[0]
+    acc_ref[0] += jnp.sum(kxc * kzc)
+    acc_ref[1] += jnp.sum(kxc * kxc)
+    acc_ref[2] += jnp.sum(kzc * kzc)
+
+    @pl.when(jnp.logical_and(i == nb - 1, j == nb - 1))
+    def _fin():
+        o_ref[...] = acc_ref[...]
+
+
+def gram_stats_pallas(Kx, Kz, *, block: int = 128, interpret: bool = True):
+    """Fused centering + reductions.  Returns (tr(KxcKzc), ‖Kxc‖², ‖Kzc‖²).
+
+    Row/col means are O(B²) to compute outside and passed in; the kernel
+    folds centering into one elementwise pass over both Grams."""
+    B = Kx.shape[0]
+    # choose the largest block <= requested that divides B (centering must
+    # see exact tiles; batch sizes are powers of two in practice)
+    block = min(block, B)
+    while B % block:
+        block -= 1
+    rx = Kx.mean(axis=1)
+    cx = Kx.mean(axis=0)
+    mx = jnp.asarray([Kx.mean()], jnp.float32)
+    rz = Kz.mean(axis=1)
+    cz = Kz.mean(axis=0)
+    mz = jnp.asarray([Kz.mean()], jnp.float32)
+    nb = B // block
+    out = pl.pallas_call(
+        functools.partial(_stats_kernel, nb=nb),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],
+        interpret=interpret,
+    )(Kx.astype(jnp.float32), Kz.astype(jnp.float32), rx, cx, rz, cz, mx, mz)
+    return out[0], out[1], out[2]

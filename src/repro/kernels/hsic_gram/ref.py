@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the HSIC Gram kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_gram_ref(x, sigma2: float):
+    """x: (B, D) -> (B, B) Gaussian-kernel Gram matrix, float32."""
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=-1)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+    return jnp.exp(-d2 / (2.0 * sigma2))
+
+
+def linear_gram_ref(x):
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+def centered_stats_ref(Kx, Kz):
+    """Returns (tr(Kxc Kzc), ‖Kxc‖², ‖Kzc‖²) for centered Grams."""
+    def center(K):
+        return (K - K.mean(0, keepdims=True) - K.mean(1, keepdims=True)
+                + K.mean())
+    Kxc, Kzc = center(Kx), center(Kz)
+    return (jnp.sum(Kxc * Kzc), jnp.sum(Kxc * Kxc), jnp.sum(Kzc * Kzc))
+
+
+def nhsic_ref(x, z, *, kernel_x="rbf", kernel_z="rbf"):
+    def gram(a, kind):
+        if kind == "linear":
+            return linear_gram_ref(a)
+        d2 = jnp.maximum(
+            jnp.sum(a * a, -1)[:, None] + jnp.sum(a * a, -1)[None]
+            - 2 * (a.astype(jnp.float32) @ a.astype(jnp.float32).T), 0)
+        s2 = jnp.mean(d2) + 1e-8
+        return jnp.exp(-d2 / (2 * s2))
+    Kx, Kz = gram(x.astype(jnp.float32), kernel_x), \
+        gram(z.astype(jnp.float32), kernel_z)
+    t, nx, nz = centered_stats_ref(Kx, Kz)
+    return t / (jnp.sqrt(nx) * jnp.sqrt(nz) + 1e-8)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: fused sLSTM time scan.
+
+Motivated directly by §Perf pair 2 (EXPERIMENTS.md): under XLA, the
+per-time-step recurrent update lowers to thousands of tiny HLO ops with the
+loop state bouncing through HBM (and, when sharded, per-step collectives).
+This kernel keeps the entire recurrent state (c, n, m, h) in VMEM across a
+whole sequence block and fuses the four gate matmuls + state update +
+output write per step.
+
+Heads are independent (xLSTM's recurrence is block-diagonal per head), so
+the grid parallelizes over (batch, head, seq-block) with the seq-block axis
+sequential; per-(b, h) VMEM footprint is
+  r: 4·Dh² f32 (4.2 MB at Dh=512) + g_in tile: block_s·4·Dh + state 4·Dh
+— comfortably inside the 16 MB VMEM budget at block_s ≤ 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(g_ref, r_ref, b_ref, c0_ref, n0_ref, m0_ref, h0_ref,
+                  hs_ref, cf_ref, nf_ref, mf_ref, hf_ref,
+                  c_s, n_s, m_s, h_s, *, block_s: int, num_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        c_s[...] = c0_ref[0, 0]
+        n_s[...] = n0_ref[0, 0]
+        m_s[...] = m0_ref[0, 0]
+        h_s[...] = h0_ref[0, 0]
+
+    r = r_ref[...][:, 0]                      # (4, Dh, Dh)
+    b = b_ref[...][:, 0]                      # (4, Dh)
+
+    def step(t, carry):
+        c, n, m, h = carry
+        g_t = g_ref[0, t, :, 0, :]            # (4, Dh)
+        rec = jnp.dot(h, r[0]), jnp.dot(h, r[1]), jnp.dot(h, r[2]), \
+            jnp.dot(h, r[3])
+        gi = g_t[0] + rec[0] + b[0]
+        gf = g_t[1] + rec[1] + b[1]
+        gz = g_t[2] + rec[2] + b[2]
+        go = g_t[3] + rec[3] + b[3]
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(gz)
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+        hs_ref[0, t, 0, :] = h_new
+        return c_new, n_new, m_new, h_new
+
+    carry = (c_s[...], n_s[...], m_s[...], h_s[...])
+    carry = jax.lax.fori_loop(0, block_s, step, carry)
+    c_s[...], n_s[...], m_s[...], h_s[...] = carry
+
+    @pl.when(si == num_s - 1)
+    def _fin():
+        cf_ref[0, 0] = c_s[...]
+        nf_ref[0, 0] = n_s[...]
+        mf_ref[0, 0] = m_s[...]
+        hf_ref[0, 0] = h_s[...]
+
+
+def slstm_scan_pallas(g_in, r, b, state0, *, block_s: int = 128,
+                      interpret: bool = True):
+    """g_in: (B, S, 4, H, Dh) f32; r: (4, H, Dh, Dh); b: (4, H, Dh);
+    state0: dict(c, n, m, h) each (B, H, Dh).
+
+    Returns (hs (B, S, H, Dh), final state)."""
+    B, S, _, H, Dh = g_in.shape
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        g_in = jnp.pad(g_in, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)),
+                       constant_values=-30.0)  # i≈0: padded steps keep state
+        # gf pad of -30 would also zero f; instead pad gf with +30 (keep)
+        g_in = g_in.at[:, S:, 1].set(30.0)
+        g_in = g_in.at[:, S:, 3].set(-30.0)
+    Sp = S + pad
+    ns = Sp // block_s
+
+    kernel = functools.partial(_slstm_kernel, block_s=block_s, num_s=ns)
+    f32 = jnp.float32
+    hs, cf, nf, mf, hf = pl.pallas_call(
+        kernel,
+        grid=(B, H, ns),
+        in_specs=[
+            pl.BlockSpec((1, block_s, 4, 1, Dh),
+                         lambda bi, hi, si: (bi, si, 0, hi, 0)),
+            pl.BlockSpec((4, 1, Dh, Dh), lambda bi, hi, si: (0, hi, 0, 0)),
+            pl.BlockSpec((4, 1, Dh), lambda bi, hi, si: (0, hi, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, 1, Dh),
+                         lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, H, Dh), f32),
+            jax.ShapeDtypeStruct((B, H, Dh), f32),
+            jax.ShapeDtypeStruct((B, H, Dh), f32),
+            jax.ShapeDtypeStruct((B, H, Dh), f32),
+            jax.ShapeDtypeStruct((B, H, Dh), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dh,), f32) for _ in range(4)],
+        interpret=interpret,
+    )(g_in.astype(f32), r.astype(f32), b.astype(f32),
+      state0["c"].astype(f32), state0["n"].astype(f32),
+      state0["m"].astype(f32), state0["h"].astype(f32))
+    hs = hs[:, :S]
+    if pad:
+        # padded tail steps preserve (c, n, m) exactly (i'≈0, f'=1) but zero
+        # the h output; the true final h is the last real step's output
+        hf = hs[:, S - 1]
+    return hs, {"c": cf, "n": nf, "m": mf, "h": hf}

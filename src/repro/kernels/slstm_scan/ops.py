@@ -1,0 +1,58 @@
+"""Jit'd wrapper for the fused sLSTM scan kernel, differentiable via a
+reference-VJP (same pattern as flash_attention.ops)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.slstm_scan.kernel import slstm_scan_pallas
+from repro.kernels.slstm_scan.ref import slstm_scan_ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _scan(g_in, r, b, state0_tuple, block_s, interpret):
+    state0 = dict(zip(("c", "n", "m", "h"), state0_tuple))
+    hs, fin = slstm_scan_pallas(g_in, r, b, state0, block_s=block_s,
+                                interpret=interpret)
+    return hs, (fin["c"], fin["n"], fin["m"], fin["h"])
+
+
+def _scan_fwd(g_in, r, b, state0_tuple, block_s, interpret):
+    return _scan(g_in, r, b, state0_tuple, block_s, interpret), \
+        (g_in, r, b, state0_tuple)
+
+
+def _scan_bwd(block_s, interpret, res, ct):
+    g_in, r, b, state0_tuple = res
+
+    def ref(g_in_, r_, b_, st_):
+        state0 = dict(zip(("c", "n", "m", "h"), st_))
+        hs, fin = slstm_scan_ref(g_in_, r_, b_, state0)
+        return hs, (fin["c"], fin["n"], fin["m"], fin["h"])
+
+    _, vjp = jax.vjp(ref, g_in, r, b, state0_tuple)
+    return vjp(ct)
+
+
+_scan.defvjp(_scan_fwd, _scan_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def slstm_scan(g_in, r, b, state0: dict, *, block_s: int = 128,
+               interpret: bool | None = None):
+    """g_in: (B, S, 4, H, Dh); returns (hs (B, S, H, Dh), final state)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    hs, fin = _scan(g_in, r, b,
+                    (state0["c"], state0["n"], state0["m"], state0["h"]),
+                    block_s, interpret)
+    return hs, dict(zip(("c", "n", "m", "h"), fin))

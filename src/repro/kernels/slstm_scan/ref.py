@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the sLSTM scan kernel.
+
+Stabilized sLSTM recurrence over precomputed gate inputs:
+    g_t   = g_in[t] + R h_{t-1} + b          (per gate, block-diagonal heads)
+    m_t   = max(log σ(g_f) + m_{t-1}, g_i)
+    i'    = exp(g_i − m_t);  f' = exp(log σ(g_f) + m_{t-1} − m_t)
+    c_t   = f' c + i' tanh(g_z);  n_t = f' n + i'
+    h_t   = σ(g_o) · c_t / max(n_t, 1e-6)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_scan_ref(g_in, r, b, state0):
+    """g_in: (B, S, 4, H, Dh); r: (4, H, Dh, Dh); b: (4, H, Dh);
+    state0: dict(c, n, m, h) each (B, H, Dh).
+    Returns (hs (B, S, H, Dh), final state dict)."""
+    def step(carry, g):
+        c, n, m, h = carry
+        rec = jnp.stack([jnp.einsum("bhe,hef->bhf", h, r[i])
+                         for i in range(4)], axis=1)
+        g = g + rec + b
+        gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(gz)
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    carry0 = (state0["c"], state0["n"], state0["m"], state0["h"])
+    (c, n, m, h), hs = jax.lax.scan(step, carry0, g_in.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# (--devices N below may lower it for local testing, still pre-import.)
+import sys  # noqa: E402
+
+if "--devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) combination against the production mesh, with zero real allocation
+(ShapeDtypeStruct stand-ins), and dump memory/cost/collective analyses for
+the roofline tables (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --sweep            # all 40 × {pod, multipod}
+  python -m repro.launch.dryrun --arch ... --mode neulite   # paper train step
+
+Results: results/dryrun/<arch>__<shape>__<mesh>__<mode>.json
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, resolve_config  # noqa: E402
+from repro.launch import analytic                                       # noqa: E402
+from repro.launch import steps as steps_mod                             # noqa: E402
+from repro.launch.mesh import make_production_mesh                      # noqa: E402
+from repro.launch.roofline import roofline_from_compiled                # noqa: E402
+from repro.models import model as tx                                    # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:   # CPU backend may not implement it
+        return {"error": str(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "host_argument_size_in_bytes",
+                 "host_output_size_in_bytes", "host_temp_size_in_bytes"):
+        if hasattr(ma, attr):
+            try:
+                out[attr] = int(getattr(ma, attr))
+            except Exception:
+                pass
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, mode: str = "auto",
+            save: bool = True, verbose: bool = True, tag: str = "") -> dict:
+    shape = SHAPES[shape_name]
+    if mode == "auto":
+        mode = steps_mod.builder_for(shape_name)
+    mesh_name = "multipod" if multi_pod else "pod"
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "mode": mode, "tag": tag, "ok": False}
+    try:
+        cfg = get_config(arch)
+        rcfg = resolve_config(cfg, shape, tp=0)     # logical (no head pad)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        builder = steps_mod.BUILDERS[mode]
+        step, abstract, in_sh, out_sh = builder(cfg, shape_name, mesh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*abstract)
+            compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        flops_factor = 6.0 if mode in ("train", "neulite") else 2.0
+        model_flops = flops_factor * tx.active_param_count(rcfg) * tokens
+
+        # analytic compute/memory terms (XLA cost_analysis counts while-loop
+        # bodies once — see launch/analytic.py); collectives parsed from the
+        # post-SPMD HLO with trip-count multiplication (launch/roofline.py)
+        cost_kind = mode if mode == "neulite" else shape.kind
+        if mode == "flround":
+            cost_kind = "neulite"      # per-local-step cost model applies
+        cost = analytic.step_cost(rcfg, cost_kind,
+                                  shape.global_batch, shape.seq_len)
+        rf, coll = roofline_from_compiled(compiled, chips, model_flops,
+                                          loop_trips=rcfg.num_periods)
+        rf.flops_per_chip = cost.flops_global / chips
+        rf.hbm_bytes_per_chip = cost.hbm_bytes_global / chips
+        record.update({
+            "ok": True,
+            "compile_s": round(t_compile, 1),
+            "chips": chips,
+            "tokens_per_step": tokens,
+            "memory_analysis": _memory_analysis_dict(compiled),
+            "cost_analysis_xla": {k: float(v) for k, v in
+                                  (compiled.cost_analysis() or {}).items()
+                                  if isinstance(v, (int, float))
+                                  and k in ("flops", "bytes accessed",
+                                            "transcendentals")},
+            "analytic": {"flops_global": cost.flops_global,
+                         "hbm_bytes_global": cost.hbm_bytes_global},
+            "collectives": coll,
+            "roofline": rf.to_dict(),
+        })
+        if verbose:
+            ma = record["memory_analysis"]
+            print(f"[OK] {arch} × {shape_name} × {mesh_name} ({mode}) "
+                  f"compile={t_compile:.1f}s "
+                  f"flops/chip={rf.flops_per_chip:.3e} "
+                  f"coll/chip={rf.collective_bytes_per_chip:.3e}B "
+                  f"bottleneck={rf.bottleneck}")
+            if "temp_size_in_bytes" in ma:
+                print(f"     memory: args={ma.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+                      f"temp={ma.get('temp_size_in_bytes', 0)/1e9:.2f}GB "
+                      f"out={ma.get('output_size_in_bytes', 0)/1e9:.2f}GB")
+    except Exception as e:
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[FAIL] {arch} × {shape_name} × {mesh_name} ({mode}): "
+                  f"{record['error']}")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = f"{arch}__{shape_name}__{mesh_name}__{mode}{suffix}.json"
+        with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def sweep(archs, shapes, meshes, modes=("auto",), skip_existing=True):
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                for mode in modes:
+                    eff = steps_mod.builder_for(shape) if mode == "auto" \
+                        else mode
+                    fn = os.path.join(
+                        RESULTS_DIR,
+                        f"{arch}__{shape}__{mesh_name}__{eff}.json")
+                    if skip_existing and os.path.exists(fn):
+                        with open(fn) as f:
+                            rec = json.load(f)
+                        if rec.get("ok"):
+                            results.append(rec)
+                            continue
+                    results.append(run_one(arch, shape,
+                                           mesh_name == "multipod", mode))
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"\nsweep: {ok}/{len(results)} combinations lowered+compiled")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES.keys()) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "train", "neulite", "prefill", "decode",
+                             "flround"])
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run even if a result file exists")
+    ap.add_argument("--devices", default="512",
+                    help="placeholder device count (consumed pre-import)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result filename (ablation runs)")
+    args = ap.parse_args()
+
+    if args.sweep:
+        archs = [args.arch] if args.arch else ARCH_IDS
+        shapes = [args.shape] if args.shape else list(SHAPES.keys())
+        meshes = [args.mesh] if args.mesh != "pod" or args.arch else \
+            ["pod", "multipod"]
+        if args.mesh and args.arch is None and args.shape is None:
+            meshes = ["pod", "multipod"]
+        sweep(archs, shapes, meshes, modes=(args.mode,),
+              skip_existing=not args.force)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --sweep)")
+        run_one(args.arch, args.shape, args.mesh == "multipod", args.mode,
+                tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,226 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` returns the SPMD per-program (≡ per-chip) numbers;
+collective bytes are parsed from the post-partitioning HLO by summing the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  Terms are seconds-per-step on TPU v5e
+constants (mesh.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every 'dtype[d0,d1,...]' occurrence in a type string
+    (handles tuple types)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_OP_RE = re.compile(
+    r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"while\(.*?\)")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _split_computations(hlo_text: str):
+    """HLO dump -> ({comp name: [body lines]}, entry name).
+
+    Computation headers start at column 0 (op lines are indented)."""
+    comps, cur, entry = {}, None, None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            s = line.strip()
+            if s.endswith("{"):
+                m = _HDR_RE.match(s)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if s.startswith("ENTRY"):
+                        entry = cur
+                    continue
+            if s == "}":
+                cur = None
+                continue
+        if cur is not None and line.strip():
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _trip_count(cond_lines) -> int:
+    """jax scans lower to while loops whose condition compares the induction
+    variable to a constant bound — take the largest int constant in the
+    condition computation (1 if none found)."""
+    best = 1
+    for line in cond_lines:
+        for c in _CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def parse_collectives(hlo_text: str, loop_trips: int = 1) -> Dict[str, dict]:
+    """Per-op-kind {count, bytes} from post-SPMD HLO text.
+
+    XLA lists a ``while``-body op once, but a scanned stack executes it
+    trip-count times.  We reconstruct per-computation execution
+    multiplicities by walking entry -> while bodies (nested loops multiply),
+    reading each loop's trip count from its condition computation.  This
+    handles heterogeneous scans (NeuLite's prefix/boundary/active splits,
+    inner mamba chunk & sLSTM time scans) exactly.  ``loop_trips`` is the
+    fallback when the walk finds nothing (defensive)."""
+    comps, entry = _split_computations(hlo_text)
+    mult: Dict[str, float] = {}
+
+    def visit(name, m, depth=0):
+        if name not in comps or depth > 12:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for line in comps[name]:
+            if "while(" in line:
+                wm = _WHILE_ATTR_RE.search(line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trips = _trip_count(comps.get(cond, []))
+                    visit(cond, m * (trips + 1), depth + 1)
+                    visit(body, m * trips, depth + 1)
+                    continue
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for br in bm.group(1).split(","):
+                    visit(br.strip().lstrip("%"), m, depth + 1)
+                continue
+            cm = _CALL_RE.search(line)
+            if cm and "fusion(" not in line:
+                visit(cm.group(1), m, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    walked = bool(mult)
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0 if walked else 1.0)
+        if m == 0.0 and walked:
+            # computation never reached from entry (e.g. dead) — skip
+            continue
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            type_str, kind, suffix = om.group(1), om.group(2), om.group(3)
+            if suffix == "-done":
+                continue  # async pairs: count the -start only
+            b = _shape_bytes(type_str)
+            out[kind]["count"] += int(round(m))
+            out[kind]["bytes"] += int(b * m)
+    if not walked:      # fallback: flat scan with uniform multiplier
+        for line in hlo_text.splitlines():
+            om = _OP_RE.match(line.strip())
+            if not om or om.group(3) == "-done":
+                continue
+            out[om.group(2)]["count"] += loop_trips
+            out[om.group(2)]["bytes"] += _shape_bytes(om.group(1)) \
+                * loop_trips
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    chips: int
+    model_flops: float = 0.0       # 6·N_active·D global
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                           loop_trips: int = 1):
+    """Returns (Roofline, collectives-dict)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = parse_collectives(text, loop_trips=loop_trips)
+    return Roofline(flops_per_chip=flops, hbm_bytes_per_chip=byts,
+                    collective_bytes_per_chip=float(coll["total_bytes"]),
+                    chips=chips, model_flops=model_flops), coll

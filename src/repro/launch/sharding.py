@@ -1,0 +1,122 @@
+"""Sharding policy: fit logical PartitionSpecs onto a concrete mesh.
+
+ParamDef trees carry *logical* specs written for the production mesh
+(model axis = 16-way).  ``fit_spec`` adapts a spec to an actual mesh:
+
+  1. drop axis names the mesh doesn't have (e.g. "pod" on a single pod);
+  2. drop an axis from a dim whose size isn't divisible by the axis size
+     (XLA supports uneven shards, but even shards keep collectives clean
+     and memory_analysis honest);
+  3. fall back: a dropped *model* axis is re-placed on the first other
+     unsharded dim that divides evenly (e.g. 56 attention heads don't
+     split 16 ways -> shard the d_model contraction dim instead).
+
+Batch dims shard over ("pod", "data") everywhere; when the global batch is
+too small (long_500k has batch=1) the batch axes are dropped and, for
+caches, the sequence dim picks up the data axis instead (rule 3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common import paramdef as PD
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return math.prod(_axis_size(mesh, n) for n in name)
+    return mesh.shape[name]
+
+
+def _names(entry):
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def fit_spec(shape: tuple, spec: P, mesh) -> P:
+    mesh_axes = set(mesh.axis_names)
+    out = []
+    dropped = []
+    spec = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for dim, entry in enumerate(spec):
+        names = tuple(n for n in _names(entry) if n in mesh_axes)
+        if not names:
+            out.append(None)
+            continue
+        size = math.prod(mesh.shape[n] for n in names)
+        if shape[dim] % size == 0 and shape[dim] >= size:
+            out.append(names if len(names) > 1 else names[0])
+        else:
+            # try a partial subset (e.g. ("pod","data") -> "data")
+            placed = False
+            for n in names:
+                if shape[dim] % mesh.shape[n] == 0 and \
+                        shape[dim] >= mesh.shape[n]:
+                    out.append(n)
+                    dropped.extend(m for m in names if m != n)
+                    placed = True
+                    break
+            if not placed:
+                out.append(None)
+                dropped.extend(names)
+    # A dropped "model" axis means the leaf replicates across model shards.
+    # (No contraction-dim fallback: sharding a matmul's contraction dim
+    # trades a few MB of weight memory for an activation-sized all-reduce
+    # per layer per pass — measured 10-100× worse on the dry-run roofline.
+    # Head-count divisibility is instead restored by zero-padded heads, see
+    # configs/shapes.pad_heads_for_tp.)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(def_tree, mesh):
+    """ParamDef tree -> NamedSharding tree fitted to ``mesh``."""
+    def fit(d: PD.ParamDef):
+        return NamedSharding(mesh, fit_spec(d.shape, d.spec, mesh))
+
+    return jax.tree.map(fit, def_tree, is_leaf=PD.is_def)
+
+
+def batch_spec(shape: tuple, mesh, policy: str = "tp") -> P:
+    """Inputs/labels batch sharding.
+
+    policy "tp"  : batch over ("pod","data"); model axis = tensor parallel.
+    policy "fsdp": batch over the largest dividing combo including "model" —
+                   weights stay model-sharded (ZeRO-3-style: XLA all-gathers
+                   each layer's weights on use, grads reduce over all batch
+                   axes).  Wins when the model is small relative to the mesh
+                   (per-layer activation all-reduce >> weight all-gather);
+                   see EXPERIMENTS.md §Perf."""
+    if policy == "fsdp":
+        candidates = [("pod", "data", "model"), ("data", "model"),
+                      ("pod", "data"), ("data",)]
+    else:
+        candidates = [("pod", "data"), ("data",)]
+    names = set(mesh.axis_names)
+    for cand in candidates:
+        axes = tuple(a for a in cand if a in names)
+        if not axes:
+            continue
+        size = math.prod(mesh.shape[a] for a in axes)
+        if shape and shape[0] % size == 0 and shape[0] >= size:
+            return P(axes if len(axes) > 1 else axes[0])
+    return P()
+
+
+def batch_shardings(sds_tree, mesh, policy: str = "tp"):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, batch_spec(s.shape, mesh, policy)),
+        sds_tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,239 @@
+"""Step factories for training / prefill / serving, shared by the real
+drivers (train.py, serve.py) and the dry-run (dryrun.py).
+
+Each factory returns (step_fn, abstract_args, in_shardings, donate) so the
+dry-run can ``jax.jit(step, in_shardings=...).lower(*abstract)`` without
+allocating anything; the real drivers call the same factories with
+materialized arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.common import paramdef as PD
+from repro.configs import (SHAPES, cache_specs, decode_inputs, input_specs,
+                           label_specs, resolve_config, token_inputs)
+from repro.core import CurriculumHP, make_stage_step, make_full_step, \
+    make_transformer_adapter
+from repro.launch.sharding import (batch_shardings, fit_spec, replicated,
+                                   tree_shardings)
+from repro.models import model as tx
+from repro.models.config import ModelConfig
+
+
+def _opt_state_defs(optimizer_name: str, param_defs):
+    """ParamDef tree describing the optimizer state (for shardings)."""
+    scalar = PD.ParamDef((), jnp.int32, P(), init="zeros")
+    if optimizer_name == "sgd":
+        return {"mu": param_defs, "step": scalar}
+    return {"m": param_defs, "v": param_defs, "step": scalar}
+
+
+def _defs_to_abstract(def_tree):
+    return PD.shape_tree(def_tree)
+
+
+def make_optimizer(name: str, lr: float = 1e-3):
+    if name == "sgd":
+        return optim.sgd(lr, momentum=0.9, weight_decay=5e-4)
+    return optim.adamw(lr)
+
+
+def _mesh_batch_shards(mesh) -> int:
+    g = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            g *= mesh.shape[ax]
+    return g
+
+
+def align_moe_dispatch(cfg: ModelConfig, mesh) -> ModelConfig:
+    """Align MoE dispatch groups with the mesh's batch shards so routing
+    sort/scatter stays shard-local (see moe.moe_apply).
+
+    REPRO_MOE_GROUPS overrides (perf-iteration ablation: 1 = the global
+    dispatch baseline)."""
+    import dataclasses
+    import os
+    if cfg.moe is None:
+        return cfg
+    g = int(os.environ.get("REPRO_MOE_GROUPS", "0")) or \
+        _mesh_batch_shards(mesh)
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=g))
+
+
+# --------------------------------------------------------------------------- #
+# full-model train step (vanilla FL / E2E baseline)
+# --------------------------------------------------------------------------- #
+def _policy() -> str:
+    import os
+    return os.environ.get("REPRO_SHARDING_POLICY", "tp")
+
+
+def build_full_train(cfg: ModelConfig, shape_name: str, mesh,
+                     optimizer_name: str = "adamw"):
+    shape = SHAPES[shape_name]
+    cfg = align_moe_dispatch(resolve_config(cfg, shape), mesh)
+    adapter = make_transformer_adapter(cfg, num_stages=4)
+    optimizer = make_optimizer(optimizer_name)
+    step = make_full_step(adapter, optimizer)
+
+    neulite_defs = adapter.defs
+    opt_defs = _opt_state_defs(optimizer_name, neulite_defs)
+    B, S = shape.global_batch, shape.seq_len
+    batch_abs = {"inputs": token_inputs(cfg, B, S),
+                 "labels": label_specs(cfg, B, S)}
+
+    abstract = (_defs_to_abstract(opt_defs), _defs_to_abstract(neulite_defs),
+                batch_abs)
+    shardings = (tree_shardings(opt_defs, mesh),
+                 tree_shardings(neulite_defs, mesh),
+                 batch_shardings(batch_abs, mesh, _policy()))
+    out_shardings = (shardings[0], shardings[1], replicated(mesh))
+    return step, abstract, shardings, out_shardings
+
+
+# --------------------------------------------------------------------------- #
+# NeuLite progressive stage step (the paper's train step)
+# --------------------------------------------------------------------------- #
+def build_neulite_train(cfg: ModelConfig, shape_name: str, mesh,
+                        optimizer_name: str = "adamw", num_stages: int = 4,
+                        stage: Optional[int] = None,
+                        curriculum: bool = True):
+    shape = SHAPES[shape_name]
+    cfg = align_moe_dispatch(resolve_config(cfg, shape), mesh)
+    adapter = make_transformer_adapter(cfg, num_stages=num_stages)
+    t = num_stages // 2 if stage is None else stage
+    optimizer = make_optimizer(optimizer_name)
+    hp = CurriculumHP(enabled=curriculum)
+    step = make_stage_step(adapter, optimizer, hp, t)
+
+    frozen_defs, trainable_defs = adapter.split_stage(adapter.defs, t)
+    opt_defs = _opt_state_defs(optimizer_name, trainable_defs)
+    B, S = shape.global_batch, shape.seq_len
+    batch_abs = {"inputs": token_inputs(cfg, B, S),
+                 "labels": label_specs(cfg, B, S)}
+
+    abstract = (_defs_to_abstract(opt_defs),
+                _defs_to_abstract(trainable_defs),
+                _defs_to_abstract(frozen_defs),
+                batch_abs,
+                _defs_to_abstract(trainable_defs))      # global_ref
+    shardings = (tree_shardings(opt_defs, mesh),
+                 tree_shardings(trainable_defs, mesh),
+                 tree_shardings(frozen_defs, mesh),
+                 batch_shardings(batch_abs, mesh, _policy()),
+                 tree_shardings(trainable_defs, mesh))
+    out_shardings = (shardings[0], shardings[1], replicated(mesh))
+    return step, abstract, shardings, out_shardings
+
+
+# --------------------------------------------------------------------------- #
+# prefill step
+# --------------------------------------------------------------------------- #
+def build_prefill(cfg: ModelConfig, shape_name: str, mesh):
+    shape = SHAPES[shape_name]
+    cfg = align_moe_dispatch(resolve_config(cfg, shape), mesh)
+
+    def prefill_step(params, inputs):
+        return tx.prefill(params, cfg, inputs)
+
+    model_defs = tx.model_defs(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    inputs_abs = token_inputs(cfg, B, S)
+    abstract = (_defs_to_abstract(model_defs), inputs_abs)
+    shardings = (tree_shardings(model_defs, mesh),
+                 batch_shardings(inputs_abs, mesh))
+    cache_defs_tree = tx.cache_defs(cfg, B, S)
+    out_shardings = (replicated(mesh),
+                     tree_shardings(cache_defs_tree, mesh))
+    return prefill_step, abstract, shardings, out_shardings
+
+
+# --------------------------------------------------------------------------- #
+# serve (decode) step
+# --------------------------------------------------------------------------- #
+def build_serve(cfg: ModelConfig, shape_name: str, mesh):
+    shape = SHAPES[shape_name]
+    cfg = align_moe_dispatch(resolve_config(cfg, shape), mesh)
+
+    def serve_step(params, inputs, caches, pos):
+        return tx.decode_step(params, cfg, inputs, caches, pos)
+
+    model_defs = tx.model_defs(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache_defs_tree = tx.cache_defs(cfg, B, S)
+    abstract = (_defs_to_abstract(model_defs),
+                decode_inputs(cfg, B),
+                _defs_to_abstract(cache_defs_tree),
+                jax.ShapeDtypeStruct((), jnp.int32))
+    shardings = (tree_shardings(model_defs, mesh),
+                 batch_shardings(decode_inputs(cfg, B), mesh),
+                 tree_shardings(cache_defs_tree, mesh),
+                 replicated(mesh))
+    out_shardings = (replicated(mesh), shardings[2])
+    return serve_step, abstract, shardings, out_shardings
+
+
+# --------------------------------------------------------------------------- #
+# full FL round (paper Alg. 1 round as ONE pjit program)
+# --------------------------------------------------------------------------- #
+def build_fl_round(cfg: ModelConfig, shape_name: str, mesh,
+                   optimizer_name: str = "sgd", num_stages: int = 4,
+                   stage: Optional[int] = None, local_steps: int = 4):
+    """Cohorts = batch shards; E local steps with no cross-cohort comms;
+    weighted FedAvg of the trainable subtree as the round's collective."""
+    from jax.sharding import NamedSharding
+    from repro.federated.distributed import (cohort_batches_specs,
+                                             make_fl_round_step)
+    shape = SHAPES[shape_name]
+    cfg = align_moe_dispatch(resolve_config(cfg, shape), mesh)
+    adapter = make_transformer_adapter(cfg, num_stages=num_stages)
+    t = num_stages // 2 if stage is None else stage
+    optimizer = make_optimizer(optimizer_name)
+    hp = CurriculumHP()
+    round_fn = make_fl_round_step(adapter, optimizer, hp, t, local_steps)
+
+    C = _mesh_batch_shards(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    per_cohort = max(1, B // C)
+    frozen_defs, trainable_defs = adapter.split_stage(adapter.defs, t)
+    batches_abs = cohort_batches_specs(cfg, C, local_steps, per_cohort, S)
+
+    def cohort_shard(sds):
+        spec = fit_spec(sds.shape, P(("pod", "data")), mesh)
+        return NamedSharding(mesh, spec)
+
+    abstract = (_defs_to_abstract(trainable_defs),
+                _defs_to_abstract(frozen_defs),
+                batches_abs,
+                jax.ShapeDtypeStruct((C,), jnp.float32))
+    shardings = (tree_shardings(trainable_defs, mesh),
+                 tree_shardings(frozen_defs, mesh),
+                 jax.tree.map(cohort_shard, batches_abs),
+                 replicated(mesh))
+    out_shardings = (shardings[0], replicated(mesh))
+    return round_fn, abstract, shardings, out_shardings
+
+
+BUILDERS = {
+    "train": build_full_train,
+    "neulite": build_neulite_train,
+    "prefill": build_prefill,
+    "decode": build_serve,
+    "flround": build_fl_round,
+}
+
+
+def builder_for(shape_name: str, paper_mode: bool = False) -> str:
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return "neulite" if paper_mode else "train"
+    return kind

@@ -1,0 +1,132 @@
+"""NeuLite progressive FL training driver.
+
+Runs the full paper pipeline on any registered architecture (reduced smoke
+variants by default; full configs are for the production mesh):
+
+  python -m repro.launch.train --arch qwen3-1.7b --rounds 20 --smoke
+  python -m repro.launch.train --arch qwen3-1.7b --e2e --steps 100  # baseline
+
+The FL simulation maps client cohorts onto synthetic non-IID LM shards;
+each round runs the Alg. 1 stage step (round-robin growth, curriculum loss,
+boundary co-training) on the selected cohort and aggregates the active
+subtree.  Checkpoints + metrics land in --out.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import save_checkpoint
+from repro.common import paramdef as PD
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import (CurriculumHP, RoundRobinSchedule, make_full_step,
+                        make_stage_step, make_transformer_adapter)
+from repro.data import dirichlet_partition, make_lm_dataset
+from repro.federated import aggregation as agg
+
+
+def lm_batches(ds, idx, batch, seed):
+    rng = np.random.default_rng(seed)
+    sel = rng.choice(idx, batch)
+    toks = ds.tokens[sel]
+    return {"inputs": {"tokens": jnp.asarray(toks[:, :-1])},
+            "labels": jnp.asarray(toks[:, 1:])}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--cohort", type=int, default=4)
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--e2e", action="store_true",
+                    help="vanilla FedAvg baseline instead of NeuLite")
+    ap.add_argument("--no-curriculum", action="store_true")
+    ap.add_argument("--out", default="results/train")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.modality != "text":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, modality="text")  # text-only driver
+    adapter = make_transformer_adapter(cfg, num_stages=args.stages)
+    params = adapter.init_params(jax.random.PRNGKey(args.seed))
+    n_params = PD.nparams(adapter.defs["model"])
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"stages={adapter.plan.num_stages} units={adapter.plan.num_units}")
+
+    ds = make_lm_dataset(args.seed, 4096, args.seq, cfg.vocab_size)
+    parts = dirichlet_partition(args.seed, ds.topics, args.clients, 1.0)
+    optimizer = optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(enabled=not args.no_curriculum, mu=0.01)
+    schedule = RoundRobinSchedule(adapter.plan.num_stages)
+    rng = np.random.default_rng(args.seed)
+    os.makedirs(args.out, exist_ok=True)
+    metrics_log = []
+
+    if args.e2e:
+        step = jax.jit(make_full_step(adapter, optimizer))
+        opt_state = optimizer.init(params)
+        for r in range(args.rounds * args.local_steps):
+            batch = lm_batches(ds, np.arange(len(ds)), args.batch,
+                               args.seed + r)
+            t0 = time.time()
+            opt_state, params, m = step(opt_state, params, batch)
+            if r % 10 == 0:
+                print(f"step {r:4d} loss {float(m['loss']):.4f} "
+                      f"({time.time()-t0:.2f}s)")
+            metrics_log.append({"step": r, "loss": float(m["loss"])})
+    else:
+        steps = {}
+        for r in range(args.rounds):
+            t = schedule.stage(r)
+            if t not in steps:
+                steps[t] = jax.jit(make_stage_step(adapter, optimizer,
+                                                   hp, t))
+            frozen, g_train = adapter.split_stage(params, t)
+            cohort = rng.choice(args.clients, args.cohort, replace=False)
+            updates, weights = [], []
+            t0 = time.time()
+            for cid in cohort:
+                trainable = g_train
+                opt_state = optimizer.init(trainable)
+                for s in range(args.local_steps):
+                    batch = lm_batches(ds, parts[cid], args.batch,
+                                       args.seed * 1000 + r * 10 + s)
+                    opt_state, trainable, m = steps[t](
+                        opt_state, trainable, frozen, batch, g_train)
+                updates.append(trainable)
+                weights.append(len(parts[cid]))
+            new_train = agg.weighted_average(updates, weights)
+            params = adapter.merge_stage(params, new_train, t)
+            loss = float(m["loss"])
+            upload = agg.tree_bytes(new_train)
+            print(f"round {r:4d} stage {t} loss {loss:.4f} "
+                  f"upload {upload/1e6:.1f}MB ({time.time()-t0:.2f}s)")
+            metrics_log.append({"round": r, "stage": t, "loss": loss,
+                                "upload_bytes": upload})
+        save_checkpoint(args.out, args.rounds, params,
+                        meta={"arch": cfg.name, "rounds": args.rounds})
+
+    with open(os.path.join(args.out, "metrics.json"), "w") as f:
+        json.dump(metrics_log, f, indent=1)
+    print(f"wrote {args.out}/metrics.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""Attention layers: GQA (with RoPE, qk-norm, QKV-bias, sliding window) and
+DeepSeek-V2 MLA (multi-head latent attention, with absorbed decode path).
+
+Each implementation exposes:
+  *_defs(cfg)                          parameter definitions
+  *_forward(params, cfg, x, positions) full-sequence causal attention (train /
+                                       prefill); returns (y, cache) where the
+                                       cache covers the processed prefix
+  *_decode(params, cfg, x, cache, pos) one-token decode against the cache
+
+Caches (per layer):
+  GQA full  : {"k": (B, S, KV, D), "v": (B, S, KV, D)}
+  GQA SWA   : same with S = window (ring buffer, slot = pos % window)
+  MLA       : {"ckv": (B, S, rank), "krope": (B, S, rope_dim)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.paramdef import ParamDef
+from repro.models.config import ModelConfig
+from repro.models.layers import MODEL_AXIS, apply_rope, rmsnorm, rmsnorm_defs
+
+NEG_INF = -1e30
+
+
+# =========================================================================== #
+# reference scaled-dot-product attention (grouped)
+# =========================================================================== #
+def sdpa(q, k, v, *, causal: bool, window: int, q_offset=0, kv_mask=None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D).  H % KV == 0.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode: Skv-1).
+    ``kv_mask``: optional (B, Skv) bool of valid cache slots.
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+
+    qpos = jnp.arange(Sq)[:, None] + q_offset          # (Sq, 1)
+    kpos = jnp.arange(k.shape[1])[None, :]             # (1, Skv)
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_mask is not None:
+        scores = jnp.where(kv_mask[:, None, None, None, :], scores, NEG_INF)
+
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+# =========================================================================== #
+# GQA
+# =========================================================================== #
+def gqa_defs(cfg: ModelConfig) -> dict:
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    Dh = cfg.resolved_head_dim
+    dt = cfg.param_dtype
+    defs = {
+        "wq": ParamDef((d, H, Dh), dt, P(None, MODEL_AXIS, None)),
+        "wk": ParamDef((d, KV, Dh), dt, P(None, MODEL_AXIS, None)),
+        "wv": ParamDef((d, KV, Dh), dt, P(None, MODEL_AXIS, None)),
+        "wo": ParamDef((H, Dh, d), dt, P(MODEL_AXIS, None, None)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, Dh), dt, P(MODEL_AXIS, None), init="zeros")
+        defs["bk"] = ParamDef((KV, Dh), dt, P(MODEL_AXIS, None), init="zeros")
+        defs["bv"] = ParamDef((KV, Dh), dt, P(MODEL_AXIS, None), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = rmsnorm_defs(Dh, dt)
+        defs["k_norm"] = rmsnorm_defs(Dh, dt)
+    return defs
+
+
+def _gqa_project(params, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(params, cfg: ModelConfig, x, positions, *, with_cache=False):
+    """Full-sequence causal (optionally windowed) attention."""
+    q, k, v = _gqa_project(params, cfg, x, positions)
+    if getattr(cfg, "use_flash_kernel", False):
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=cfg.causal, window=cfg.window)
+    else:
+        out = sdpa(q, k, v, causal=cfg.causal, window=cfg.window)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    if not with_cache:
+        return y, None
+    if cfg.window > 0:
+        W = cfg.window
+        k, v = k[:, -W:], v[:, -W:]
+    return y, {"k": k, "v": v}
+
+
+def gqa_decode(params, cfg: ModelConfig, x, cache, pos):
+    """x: (B, 1, d); pos: scalar absolute position of the new token."""
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q, k, v = _gqa_project(params, cfg, x, positions)
+    S = cache["k"].shape[1]
+    slot = jnp.where(cfg.window > 0, pos % S, jnp.minimum(pos, S - 1))
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if cfg.window > 0:
+        valid = jnp.arange(S) < jnp.minimum(pos + 1, S)
+    else:
+        valid = jnp.arange(S) <= pos
+    kv_mask = jnp.broadcast_to(valid[None], (x.shape[0], S))
+    # positions already baked into cached K via RoPE; softmax is
+    # permutation-invariant so ring-buffer order is fine.
+    out = sdpa(q, k_cache, v_cache, causal=False, window=0, kv_mask=kv_mask)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def gqa_cache_defs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    KV, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    S = min(seq, cfg.window) if cfg.window > 0 else seq
+    dt = cfg.param_dtype
+    # batch over data; kv heads over model when divisible, else the cache's
+    # seq dim picks up the model axis (sharded-context attention — GSPMD
+    # inserts the partial-softmax collectives)
+    if KV % 16 == 0:
+        spec = P(("pod", "data"), None, MODEL_AXIS, None)
+    else:
+        spec = P(("pod", "data"), MODEL_AXIS, None, None)
+    return {
+        "k": ParamDef((batch, S, KV, Dh), dt, spec, init="zeros"),
+        "v": ParamDef((batch, S, KV, Dh), dt, spec, init="zeros"),
+    }
+
+
+# =========================================================================== #
+# MLA (DeepSeek-V2)
+# =========================================================================== #
+def mla_defs(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    dt = cfg.param_dtype
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    defs = {
+        "w_dkv": ParamDef((d, m.kv_lora_rank), dt, P(None, None)),
+        "w_kr": ParamDef((d, m.qk_rope_head_dim), dt, P(None, None)),
+        "kv_norm": rmsnorm_defs(m.kv_lora_rank, dt),
+        "w_uk": ParamDef((m.kv_lora_rank, H, m.qk_nope_head_dim), dt,
+                         P(None, MODEL_AXIS, None)),
+        "w_uv": ParamDef((m.kv_lora_rank, H, m.v_head_dim), dt,
+                         P(None, MODEL_AXIS, None)),
+        "wo": ParamDef((H, m.v_head_dim, d), dt, P(MODEL_AXIS, None, None)),
+    }
+    if m.q_lora_rank:
+        defs["w_dq"] = ParamDef((d, m.q_lora_rank), dt, P(None, None))
+        defs["q_norm"] = rmsnorm_defs(m.q_lora_rank, dt)
+        defs["w_uq"] = ParamDef((m.q_lora_rank, H, qk_dim), dt,
+                                P(None, MODEL_AXIS, None))
+    else:
+        defs["wq"] = ParamDef((d, H, qk_dim), dt, P(None, MODEL_AXIS, None))
+    return defs
+
+
+def _mla_q(params, cfg, x, positions):
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = rmsnorm(params["q_norm"], x @ params["w_dq"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bshe", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(params, cfg, x, positions):
+    m = cfg.mla
+    ckv = rmsnorm(params["kv_norm"], x @ params["w_dkv"], cfg.norm_eps)
+    krope = x @ params["w_kr"]                                  # (B, S, rope)
+    krope = apply_rope(krope[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]
+    return ckv, krope
+
+
+def mla_forward(params, cfg: ModelConfig, x, positions, *, with_cache=False):
+    """Prefill / train: expand latents to per-head K/V (naive path)."""
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv, krope = _mla_latents(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", ckv, params["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", ckv, params["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    H = cfg.num_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  (*krope.shape[:2], H, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    out = sdpa(q, k, v, causal=True, window=cfg.window)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    if not with_cache:
+        return y, None
+    return y, {"ckv": ckv, "krope": krope}
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache, pos):
+    """Absorbed decode: attention in the latent (rank) space — the cache
+    stays compressed; per-head K/V are never materialized."""
+    m = cfg.mla
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)     # (B,1,H,·)
+    ckv_new, krope_new = _mla_latents(params, cfg, x, positions)
+    S = cache["ckv"].shape[1]
+    slot = jnp.minimum(pos, S - 1)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, slot, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], krope_new, (0, slot, 0))
+
+    # absorb W_uk into q:  q_lat = q_nope @ W_uk  -> rank space
+    q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, params["w_uk"])
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv)
+              + jnp.einsum("bqhe,bse->bhqs", q_rope, krope))
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = scores.astype(jnp.float32) * scale
+    valid = jnp.arange(S) <= pos
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    ctx_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv)
+    ctx = jnp.einsum("bqhr,rhe->bqhe", ctx_lat, params["w_uv"])
+    y = jnp.einsum("bqhe,hed->bqd", ctx, params["wo"])
+    return y, {"ckv": ckv, "krope": krope}
+
+
+def mla_cache_defs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    m = cfg.mla
+    dt = cfg.param_dtype
+    return {
+        "ckv": ParamDef((batch, seq, m.kv_lora_rank), dt,
+                        P(("pod", "data"), None, MODEL_AXIS), init="zeros"),
+        "krope": ParamDef((batch, seq, m.qk_rope_head_dim), dt,
+                          P(("pod", "data"), None, None), init="zeros"),
+    }
+
+
+# =========================================================================== #
+# dispatch helpers
+# =========================================================================== #
+def attn_defs(cfg: ModelConfig) -> dict:
+    return mla_defs(cfg) if cfg.attn_impl == "mla" else gqa_defs(cfg)
+
+
+def attn_forward(params, cfg, x, positions, *, with_cache=False):
+    fn = mla_forward if cfg.attn_impl == "mla" else gqa_forward
+    return fn(params, cfg, x, positions, with_cache=with_cache)
+
+
+def attn_decode(params, cfg, x, cache, pos):
+    fn = mla_decode if cfg.attn_impl == "mla" else gqa_decode
+    return fn(params, cfg, x, cache, pos)
+
+
+def attn_cache_defs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    fn = mla_cache_defs if cfg.attn_impl == "mla" else gqa_cache_defs
+    return fn(cfg, batch, seq)

@@ -1,0 +1,222 @@
+"""Model configuration system.
+
+One ``ModelConfig`` describes any architecture in the assigned pool:
+dense GQA transformers, MLA+MoE (DeepSeek-V2), SSM (xLSTM), hybrid
+Mamba+attention+MoE (Jamba), audio-token decoders (MusicGen) and VLM
+backbones (LLaVA-NeXT).
+
+The layer stack is described as a repeating *pattern* of sub-layer kinds
+(``attn`` / ``mamba`` / ``mlstm`` / ``slstm``), each with an FFN kind
+(``mlp`` / ``moe`` / ``none``).  The stack is laid out as
+``num_periods = num_layers // len(pattern)`` repetitions scanned with
+``jax.lax.scan`` (params stacked over the period axis), which keeps HLO
+size and compile time flat in depth — essential for the 40-combination
+dry-run sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0            # 0 = no query compression
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8            # routed experts
+    top_k: int = 2
+    num_shared: int = 0             # always-on shared experts
+    d_ff_expert: int = 0            # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_z_weight: float = 1e-3
+    aux_loss_weight: float = 1e-2
+    first_dense_layers: int = 0     # leading layers that use a dense MLP
+    d_ff_dense: int = 0             # hidden dim of those dense layers
+    # dispatch locality: sort/scatter tokens within each of `dispatch_groups`
+    # groups (≈ data shards) instead of globally.  1 = global (single host);
+    # the launcher sets this to the mesh's batch-shard count so GSPMD lowers
+    # dispatch to an all-to-all instead of all-reducing the global (E·C, d)
+    # buffer (§Perf hillclimb, EXPERIMENTS.md).
+    dispatch_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 selective SSM."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                # 0 -> ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block mix; positions within the pattern that are sLSTM."""
+    mlstm_expand: int = 2           # up-projection factor inside mLSTM block
+    slstm_proj_factor: float = 4.0 / 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+
+    # --- layer pattern -----------------------------------------------------
+    # repeating tuple of (layer_kind, ffn_kind); length must divide num_layers
+    # layer_kind: attn | mamba | mlstm | slstm ; ffn_kind: mlp | moe | none
+    pattern: Tuple[Tuple[str, str], ...] = (("attn", "mlp"),)
+
+    # --- attention ---------------------------------------------------------
+    attn_impl: str = "gqa"          # gqa | mla
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    window: int = 0                 # 0 = full causal; >0 = sliding window
+    rope_theta: float = 10_000.0
+    mla: Optional[MLAConfig] = None
+
+    # --- mixtures / ssm ----------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # --- modality ----------------------------------------------------------
+    modality: str = "text"          # text | audio | vlm | image
+    num_output_heads: int = 1       # musicgen: 4 codebook heads
+    num_vision_patches: int = 0     # llava: prefix of precomputed patch embeds
+    # image-classification mode (paper-faithful ViT experiments)
+    task: str = "lm"                # lm | classify
+    causal: bool = True
+    image_size: int = 32
+    patch_size: int = 4
+    in_channels: int = 3
+
+    # --- misc ----------------------------------------------------------------
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "swiglu"             # swiglu | gelu
+    dtype: str = "bfloat16"
+    # long-context fallback: full-attention archs get a sliding-window
+    # *variant* for the long_500k decode shape (documented in DESIGN.md).
+    long_context_window: int = 4096
+    # route attention through the Pallas flash kernel (TPU runtime path;
+    # the einsum reference path is kept for CPU smoke/dry-run lowering)
+    use_flash_kernel: bool = False
+    # route the sLSTM time scan through the fused Pallas kernel (state in
+    # VMEM across sequence blocks — the §Perf pair-2 fix, EXPERIMENTS.md)
+    use_slstm_kernel: bool = False
+
+    # ----------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def num_periods(self) -> int:
+        assert self.num_layers % self.period == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"pattern period {self.period}"
+        )
+        return self.num_layers // self.period
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state does not grow quadratically with context
+        (recurrent layers and/or windowed attention only)."""
+        kinds = {k for k, _ in self.pattern}
+        if kinds <= {"mamba", "mlstm", "slstm"}:
+            return True
+        return self.window > 0
+
+    @property
+    def attn_layer_fraction(self) -> float:
+        return sum(1 for k, _ in self.pattern if k == "attn") / self.period
+
+    def with_window(self, window: int) -> "ModelConfig":
+        """Sliding-window variant (long_500k carve-out for dense archs)."""
+        return dataclasses.replace(self, window=window)
+
+    def reduced(self, num_layers: int = 2, d_model: int = 256,
+                num_experts: int = 4, vocab: int = 512) -> "ModelConfig":
+        """Reduced same-family variant for CPU smoke tests."""
+        period = self.period
+        layers = max(num_layers, period)
+        layers = (layers // period) * period or period
+        heads = max(2, min(4, self.num_heads))
+        kv = min(self.num_kv_heads, heads)
+        if heads % kv:
+            kv = heads
+        moe = self.moe
+        if moe is not None:
+            moe = dataclasses.replace(
+                moe,
+                num_experts=min(num_experts, moe.num_experts),
+                top_k=min(2, moe.top_k),
+                num_shared=min(1, moe.num_shared),
+                d_ff_expert=min(128, moe.d_ff_expert) or 128,
+                d_ff_dense=min(256, moe.d_ff_dense) or 256,
+                first_dense_layers=min(moe.first_dense_layers, 1),
+            )
+        mla = self.mla
+        if mla is not None:
+            mla = MLAConfig(kv_lora_rank=64, q_lora_rank=0,
+                            qk_nope_head_dim=32, qk_rope_head_dim=16,
+                            v_head_dim=32)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=layers,
+            d_model=min(d_model, self.d_model),
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=0,
+            d_ff=min(512, self.d_ff) if self.d_ff else 0,
+            vocab_size=min(vocab, self.vocab_size),
+            moe=moe,
+            mla=mla,
+            window=min(self.window, 64) if self.window else 0,
+            num_vision_patches=min(self.num_vision_patches, 16),
+            dtype="float32",
+        )
+
+
+def jamba_pattern() -> Tuple[Tuple[str, str], ...]:
+    """Jamba period-8 super-block: attention at position 4, Mamba elsewhere,
+    MoE on every other layer (odd positions). [arXiv:2403.19887]"""
+    pat = []
+    for i in range(8):
+        kind = "attn" if i == 4 else "mamba"
+        ffn = "moe" if i % 2 == 1 else "mlp"
+        pat.append((kind, ffn))
+    return tuple(pat)
+
+
+def xlstm_pattern() -> Tuple[Tuple[str, str], ...]:
+    """xLSTM[7:1]: 7 mLSTM blocks then 1 sLSTM block per period of 8.
+    xLSTM blocks carry their own up/down projection; no separate FFN.
+    [arXiv:2405.04517]"""
+    return tuple([("mlstm", "none")] * 7 + [("slstm", "none")])

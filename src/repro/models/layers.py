@@ -1,0 +1,118 @@
+"""Common layers: RMSNorm, rotary embeddings, MLPs, embeddings, heads.
+
+Every layer is a pair of functions:
+  ``<layer>_defs(cfg, ...) -> ParamDef tree``  (shapes + shardings + init)
+  ``<layer>(params, x, ...) -> y``             (pure apply)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.paramdef import ParamDef
+from repro.models.config import ModelConfig
+
+# Logical mesh axes used across the framework:
+#   "data"  — batch / client cohort axis (and "pod" stacks on top of it)
+#   "model" — tensor-parallel axis (heads, d_ff, experts, vocab)
+MODEL_AXIS = "model"
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def rmsnorm_defs(d: int, dtype) -> dict:
+    return {"scale": ParamDef((d,), dtype, P(None), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# rotary position embeddings
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                            # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+def mlp_defs(d_model: int, d_ff: int, dtype, act: str = "swiglu") -> dict:
+    defs = {
+        "w_up": ParamDef((d_model, d_ff), dtype, P(None, MODEL_AXIS)),
+        "w_down": ParamDef((d_ff, d_model), dtype, P(MODEL_AXIS, None)),
+    }
+    if act == "swiglu":
+        defs["w_gate"] = ParamDef((d_model, d_ff), dtype, P(None, MODEL_AXIS))
+    return defs
+
+
+def mlp(params, x, act: str = "swiglu"):
+    up = x @ params["w_up"]
+    if act == "swiglu":
+        up = jax.nn.silu(x @ params["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return up @ params["w_down"]
+
+
+# --------------------------------------------------------------------------- #
+# embeddings / output heads
+# --------------------------------------------------------------------------- #
+def embedding_defs(vocab: int, d_model: int, dtype) -> dict:
+    return {"table": ParamDef((vocab, d_model), dtype, P(MODEL_AXIS, None),
+                              init="embed")}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def head_defs(d_model: int, vocab: int, dtype, n_heads: int = 1) -> dict:
+    if n_heads == 1:
+        return {"w_out": ParamDef((d_model, vocab), dtype, P(None, MODEL_AXIS))}
+    return {"w_out": ParamDef((n_heads, d_model, vocab), dtype,
+                              P(None, None, MODEL_AXIS))}
+
+
+def lm_head(params, x, n_heads: int = 1):
+    """Returns logits: (..., vocab) or (..., n_heads, vocab)."""
+    w = params["w_out"]
+    if n_heads == 1:
+        return x @ w
+    return jnp.einsum("...d,hdv->...hv", x, w)
+
+
+# --------------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------------- #
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy. logits (..., V) float; labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

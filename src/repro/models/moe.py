@@ -1,0 +1,162 @@
+"""Mixture-of-Experts layer (DeepSeek-V2 / Jamba style).
+
+Sort-based grouped dispatch with a static per-expert capacity: token→expert
+assignments are sorted by expert id, ranked within their expert, dropped past
+capacity, scattered into an ``(E, C, d)`` buffer, processed by batched expert
+matmuls, and combined back with router weights.  All shapes are static, which
+keeps the layer pjit/scan friendly; the expert axis shards over the ``model``
+mesh axis (expert parallelism) so dispatch/combine lower to all-to-all-style
+collectives under GSPMD.
+
+Supports DeepSeek's shared experts (always-on, folded into one dense MLP of
+width ``num_shared * d_ff_expert``) and auxiliary losses (load-balance +
+router z-loss).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.paramdef import ParamDef
+from repro.common.sharding import shard
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import MODEL_AXIS, mlp, mlp_defs
+
+
+def expert_capacity(num_tokens: int, moe: MoEConfig) -> int:
+    c = math.ceil(num_tokens * moe.top_k / moe.num_experts * moe.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    moe = cfg.moe
+    d, ff = cfg.d_model, moe.d_ff_expert
+    dt = cfg.param_dtype
+    E = moe.num_experts
+    defs = {
+        "router": ParamDef((d, E), jnp.float32, P(None, None), scale=0.02),
+        "w_gate": ParamDef((E, d, ff), dt, P(MODEL_AXIS, None, None)),
+        "w_up": ParamDef((E, d, ff), dt, P(MODEL_AXIS, None, None)),
+        "w_down": ParamDef((E, ff, d), dt, P(MODEL_AXIS, None, None)),
+    }
+    if moe.num_shared:
+        defs["shared"] = mlp_defs(d, moe.num_shared * ff, dt, act="swiglu")
+    return defs
+
+
+def _dispatch_group(xt, logits, moe: MoEConfig, C: int):
+    """Sort-based dispatch within one token group.
+
+    xt: (n, d); logits: (n, E).  Returns (buf (E, C, d), slot_tok (E, C),
+    slot_w (E, C)) — the *slot -> token* inverse map, so the combine is a
+    scatter-add whose updates align with the expert-sharded output buffer
+    (GSPMD then reduces partial sums over the expert/model axis instead of
+    all-gathering the whole buffer; §Perf pair 1 iteration 3)."""
+    n, d = xt.shape
+    E, K = moe.num_experts, moe.top_k
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                        # (n, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                                    # (n*K,)
+    flat_w = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n), K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    counts = jnp.bincount(se, length=E)                           # (E,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * K) - starts[se]                         # pos in expert
+    keep = rank < C
+    dest = jnp.where(keep, se * C + rank, E * C)                  # drop slot
+
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[dest].set(xt[stok])
+    slot_tok = jnp.full((E * C + 1,), n, jnp.int32).at[dest].set(stok)
+    slot_w = jnp.zeros((E * C + 1,), jnp.float32).at[dest].set(sw)
+    return (buf[:-1].reshape(E, C, d), slot_tok[:-1].reshape(E, C),
+            slot_w[:-1].reshape(E, C))
+
+
+def _combine_group(out, slot_tok, slot_w, n: int, dtype):
+    """out: (E, C, d) expert outputs -> (n, d) combined tokens.
+
+    Every slot writes to exactly one token (scatter-add; empty slots target
+    the padding row n).  The scatter target keeps the model dtype so the
+    cross-shard partial-sum reduce moves bf16, not f32 (§Perf pair 1
+    iteration 4) — each token receives ≤ top_k + shared contributions, so
+    bf16 accumulation is safe."""
+    E, C, d = out.shape
+    upd = (out.astype(jnp.float32) * slot_w[..., None]) \
+        .reshape(E * C, d).astype(dtype)
+    y = jnp.zeros((n + 1, d), dtype).at[slot_tok.reshape(-1)].add(upd)
+    return y[:n]
+
+
+def moe_apply(params, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (y, aux) with aux = {load_balance, router_z}.
+
+    Dispatch is performed within ``moe.dispatch_groups`` token groups
+    (aligned with the mesh's batch shards by the launcher).  Group-local
+    sort/scatter keeps the routing data-parallel, so the only cross-shard
+    traffic is the (G, E, C, d) buffer resharding group-axis -> expert-axis
+    — an all-to-all — instead of an all-reduce of a globally-scattered
+    buffer (measured ~300x collective reduction on deepseek-v2-236b;
+    EXPERIMENTS.md §Perf)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    N = B * S
+    E, K = moe.num_experts, moe.top_k
+    G = max(1, min(moe.dispatch_groups, N))
+    while N % G:
+        G -= 1
+    n_local = N // G
+    C = expert_capacity(n_local, moe)
+
+    xt = x.reshape(N, d)
+    logits = (xt.astype(jnp.float32) @ params["router"])          # (N, E)
+
+    # ---- aux losses (global statistics) -----------------------------------
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)
+    me = probs.mean(axis=0)                                       # (E,)
+    routed = jax.nn.one_hot(top_e, E, dtype=jnp.float32).sum(1)   # (N, E)
+    ce = routed.mean(axis=0) / K
+    load_balance = E * jnp.sum(me * ce)
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"load_balance": load_balance, "router_z": router_z}
+
+    # ---- group-local dispatch ---------------------------------------------
+    xg = xt.reshape(G, n_local, d)
+    lg = logits.reshape(G, n_local, E)
+    xg = shard(xg, ("pod", "data"), None, None)
+    bufs, slot_tok, slot_w = jax.vmap(
+        lambda xt_, lg_: _dispatch_group(xt_, lg_, moe, C))(xg, lg)
+    # bufs: (G, E, C, d) — 2-D sharded: groups stay on their data shards,
+    # experts shard over model (each chip slices its expert columns locally;
+    # no gather on the way in)
+    bufs = shard(bufs, ("pod", "data"), MODEL_AXIS, None, None)
+
+    # ---- grouped expert MLPs (swiglu), (G, E) tiled over (data, model) -----
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", bufs, params["w_gate"]))
+    up = jnp.einsum("gecd,edf->gecf", bufs, params["w_up"])
+    out = jnp.einsum("gecf,efd->gecd", gate * up, params["w_down"])
+    out = shard(out, ("pod", "data"), MODEL_AXIS, None, None)
+
+    # ---- combine: slot->token scatter-add; expert (model) axis contributes
+    # partial sums that GSPMD reduces over the model axis — no output-buffer
+    # all-gather ---------------------------------------------------------------
+    y = jax.vmap(lambda o, st, sw_: _combine_group(
+        o, st, sw_, n_local, x.dtype))(out, slot_tok, slot_w)
+    y = shard(y, ("pod", "data"), None, None)
+    y = y.reshape(N, d)
+
+    if moe.num_shared:
+        y = y + mlp(params["shared"], xt, act="swiglu")
+    return y.reshape(B, S, d), aux
+
+
+def moe_aux_loss(aux: dict, moe: MoEConfig):
+    return (moe.aux_loss_weight * aux["load_balance"]
+            + moe.router_z_weight * aux["router_z"])

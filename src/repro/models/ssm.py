@@ -1,0 +1,465 @@
+"""Recurrent sequence layers: Mamba-1 selective SSM (Jamba) and xLSTM cells
+(mLSTM with matrix memory, sLSTM with scalar memory and recurrent gating).
+
+TPU adaptation notes (DESIGN.md §Hardware-adaptation):
+  * Mamba's CUDA selective-scan kernel is replaced by a *chunked* scan —
+    an outer ``lax.scan`` over sequence chunks carrying the (B, d_in, N)
+    boundary state, with a parallel ``associative_scan`` inside each chunk.
+    Chunking bounds the materialized hidden-state tensor to one chunk and
+    keeps the HLO a single loop (compile time flat in seq_len).
+  * mLSTM trains in its stabilized parallel (quadratic) form — an
+    attention-like einsum that maps onto the MXU — and decodes with the
+    O(1) matrix-memory recurrence.
+  * sLSTM is inherently sequential (recurrent gating); it trains under
+    ``lax.scan`` over time.
+
+All layers expose ``*_defs``, ``*_forward`` (full sequence, returns final
+recurrent state as cache) and ``*_decode`` (single token).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.paramdef import ParamDef
+from repro.models.config import ModelConfig
+from repro.models.layers import MODEL_AXIS
+
+# =========================================================================== #
+# causal depthwise conv (shared by mamba / mlstm)
+# =========================================================================== #
+def causal_conv(x, w, b=None):
+    """x: (B, S, C); w: (C, K) depthwise causal conv along S."""
+    K = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, i : i + x.shape[1], :] * w[None, None, :, K - 1 - i]
+            for i in range(K))
+    if b is not None:
+        y = y + b
+    return y
+
+
+def causal_conv_step(x_t, buf, w, b=None):
+    """x_t: (B, C) new input; buf: (B, K-1, C) previous inputs."""
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)      # (B, K, C)
+    y = jnp.einsum("bkc,ck->bc", window, w[:, ::-1])
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:, :]
+
+
+# =========================================================================== #
+# Mamba-1
+# =========================================================================== #
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.d_state, s.d_conv
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, N, K = mamba_dims(cfg)
+    dt = cfg.param_dtype
+    return {
+        "in_proj": ParamDef((d, 2 * d_in), dt, P(None, MODEL_AXIS)),
+        "conv_w": ParamDef((d_in, K), dt, P(MODEL_AXIS, None), scale=0.1),
+        "conv_b": ParamDef((d_in,), dt, P(MODEL_AXIS), init="zeros"),
+        "x_proj": ParamDef((d_in, dt_rank + 2 * N), dt, P(MODEL_AXIS, None)),
+        "dt_proj": ParamDef((dt_rank, d_in), dt, P(None, MODEL_AXIS)),
+        "dt_bias": ParamDef((d_in,), jnp.float32, P(MODEL_AXIS), init="zeros"),
+        "A_log": ParamDef((d_in, N), jnp.float32, P(MODEL_AXIS, None),
+                          init="zeros"),
+        "D": ParamDef((d_in,), jnp.float32, P(MODEL_AXIS), init="ones"),
+        "out_proj": ParamDef((d_in, d), dt, P(MODEL_AXIS, None)),
+    }
+
+
+def _mamba_ssm_inputs(params, cfg, xc):
+    """xc: (B, S, d_in) post-conv activations -> (dt, Bs, Cs)."""
+    d_in, dt_rank, N, _ = mamba_dims(cfg)
+    proj = xc @ params["x_proj"]
+    dt_lo, Bs, Cs = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_lo @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])
+    return dt, Bs.astype(jnp.float32), Cs.astype(jnp.float32)
+
+
+_MAMBA_CHUNK = 256
+
+
+def _mamba_scan(dt, Bs, Cs, xc, A, h0):
+    """Chunked selective scan.
+
+    dt, xc: (B, S, d_in); Bs, Cs: (B, S, N); A: (d_in, N); h0: (B, d_in, N).
+    Returns y: (B, S, d_in), h_final.
+    """
+    Bsz, S, d_in = xc.shape
+    N = Bs.shape[-1]
+    Q = min(_MAMBA_CHUNK, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        dt, Bs, Cs, xc = z(dt), z(Bs), z(Cs), z(xc)
+
+    def chunk(h, inp):
+        dt_c, B_c, C_c, x_c = inp                       # (B, Q, ·)
+        # discretize
+        dA = jnp.exp(dt_c[..., None] * A)               # (B, Q, d_in, N)
+        dBx = (dt_c * x_c.astype(jnp.float32))[..., None] * B_c[:, :, None, :]
+
+        def comb(a, b):
+            return a[0] * b[0], b[0] * a[1] + b[1]
+
+        # prepend carry as step 0 with dA=1
+        ones = jnp.ones_like(dA[:, :1])
+        elems = (jnp.concatenate([ones, dA], 1),
+                 jnp.concatenate([h[:, None], dBx], 1))
+        _, hs = jax.lax.associative_scan(comb, elems, axis=1)
+        hs = hs[:, 1:]                                   # (B, Q, d_in, N)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, C_c)
+        return hs[:, -1], y
+
+    inputs = tuple(a.reshape(Bsz, nc, Q, *a.shape[2:]).swapaxes(0, 1)
+                   for a in (dt, Bs, Cs, xc))
+    h_final, ys = jax.lax.scan(jax.remat(chunk), h0, inputs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, nc * Q, d_in)[:, :S]
+    return y, h_final
+
+
+def mamba_forward(params, cfg: ModelConfig, x, positions, *, with_cache=False):
+    d_in, _, N, K = mamba_dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ params["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = causal_conv(x1, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(x1)
+    dt, Bs, Cs = _mamba_ssm_inputs(params, cfg, xc)
+    A = -jnp.exp(params["A_log"])
+    h0 = jnp.zeros((B, d_in, N), jnp.float32)
+    y, h = _mamba_scan(dt, Bs, Cs, xc, A, h0)
+    y = (y + params["D"] * xc.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    if not with_cache:
+        return out, None
+    conv_buf = jnp.split(xz, 2, axis=-1)[0][:, -(K - 1):, :]
+    return out, {"h": h, "conv": conv_buf}
+
+
+def mamba_decode(params, cfg: ModelConfig, x, cache, pos):
+    """x: (B, 1, d)."""
+    d_in, _, N, K = mamba_dims(cfg)
+    xz = x[:, 0] @ params["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc_t, conv_buf = causal_conv_step(x1, cache["conv"], params["conv_w"],
+                                      params["conv_b"])
+    xc = jax.nn.silu(xc_t)[:, None]                     # (B, 1, d_in)
+    dt, Bs, Cs = _mamba_ssm_inputs(params, cfg, xc)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)                 # (B, d_in, N)
+    dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bs[:, 0, None]
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cs[:, 0])
+    y = (y + params["D"] * xc[:, 0].astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z))[:, None] @ params["out_proj"]
+    return out, {"h": h, "conv": conv_buf}
+
+
+def mamba_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    d_in, _, N, K = mamba_dims(cfg)
+    return {
+        "h": ParamDef((batch, d_in, N), jnp.float32,
+                      P(("pod", "data"), MODEL_AXIS, None), init="zeros"),
+        "conv": ParamDef((batch, K - 1, d_in), cfg.param_dtype,
+                         P(("pod", "data"), None, MODEL_AXIS), init="zeros"),
+    }
+
+
+# =========================================================================== #
+# mLSTM (xLSTM matrix-memory cell)
+# =========================================================================== #
+def mlstm_dims(cfg: ModelConfig):
+    d_in = cfg.xlstm.mlstm_expand * cfg.d_model
+    H = cfg.num_heads
+    return d_in, H, d_in // H
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, H, Dh = mlstm_dims(cfg)
+    dt = cfg.param_dtype
+    return {
+        "w_up": ParamDef((d, 2 * d_in), dt, P(None, MODEL_AXIS)),
+        "conv_w": ParamDef((d_in, 4), dt, P(MODEL_AXIS, None), scale=0.1),
+        "wq": ParamDef((d_in, H, Dh), dt, P(None, MODEL_AXIS, None)),
+        "wk": ParamDef((d_in, H, Dh), dt, P(None, MODEL_AXIS, None)),
+        "wv": ParamDef((d_in, H, Dh), dt, P(None, MODEL_AXIS, None)),
+        "wi": ParamDef((d_in, H), jnp.float32, P(None, MODEL_AXIS),
+                       scale=0.02),
+        "wf": ParamDef((d_in, H), jnp.float32, P(None, MODEL_AXIS),
+                       scale=0.02),
+        "bi": ParamDef((H,), jnp.float32, P(MODEL_AXIS), init="zeros"),
+        "bf": ParamDef((H,), jnp.float32, P(MODEL_AXIS), init="ones"),
+        "out_norm": ParamDef((d_in,), dt, P(MODEL_AXIS), init="ones"),
+        "w_down": ParamDef((d_in, d), dt, P(MODEL_AXIS, None)),
+    }
+
+
+def _mlstm_qkv_gates(params, x_in):
+    """x_in: (B, S, d_in) (post-conv for q/k path)."""
+    q = jnp.einsum("bsc,che->bshe", x_in, params["wq"])
+    k = jnp.einsum("bsc,che->bshe", x_in, params["wk"])
+    return q, k
+
+
+_MLSTM_CHUNK = 128
+
+
+def _mlstm_chunk_step(carry, inp, Dh):
+    """Chunkwise-parallel mLSTM (xLSTM chunkwise form).
+
+    carry: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)) log-stabilized state.
+    inp:   q, k, v (B,Q,H,Dh) + logi, logf (B,Q,H) for one chunk.
+    Intra-chunk pairs use the quadratic form (Q×Q, MXU-shaped); the previous
+    chunks' contribution enters through the running matrix memory.
+    """
+    C, n, m_run = carry
+    q, k, v, logi, logf = inp
+    B, Q, H, _ = q.shape
+    F = jnp.cumsum(logf, axis=1)                       # (B,Q,H)
+
+    # intra-chunk log weights D_ij = F_i − F_j + logi_j (j ≤ i)
+    Dm = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Dm = jnp.where(causal[None, :, :, None], Dm, -jnp.inf)
+    m_intra = jnp.max(Dm, axis=2)                      # (B,Q,H)
+    m_inter = F + m_run[:, None]                       # (B,Q,H)
+    m_i = jnp.maximum(m_intra, m_inter)
+
+    W = jnp.exp(Dm - m_i[:, :, None, :])               # (B,Q,Q,H)
+    scores = jnp.einsum("bqhe,bkhe->bqkh", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(Dh) * W
+    w_inter = jnp.exp(m_inter - m_i)                   # (B,Q,H)
+
+    qf = q.astype(jnp.float32)
+    num = (jnp.einsum("bqkh,bkhe->bqhe", scores, v.astype(jnp.float32))
+           + w_inter[..., None]
+           * jnp.einsum("bhef,bqhe->bqhf", C, qf) / math.sqrt(Dh))
+    den_intra = scores.sum(axis=2)                     # (B,Q,H)
+    den_inter = w_inter * jnp.einsum("bhe,bqhe->bqh", n, qf) / math.sqrt(Dh)
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_i))
+    h = num / den[..., None]                           # (B,Q,H,Dh)
+
+    # end-of-chunk state update
+    wk = F[:, -1:, :] - F + logi                       # (B,Q,H)
+    m_new = jnp.maximum(F[:, -1] + m_run, jnp.max(wk, axis=1))
+    kw = k.astype(jnp.float32) * jnp.exp(wk - m_new[:, None])[..., None]
+    C_new = (jnp.exp(F[:, -1] + m_run - m_new)[:, :, None, None] * C
+             + jnp.einsum("bqhe,bqhf->bhef", kw, v.astype(jnp.float32)))
+    n_new = jnp.exp(F[:, -1] + m_run - m_new)[..., None] * n \
+        + kw.sum(axis=1)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_forward(params, cfg: ModelConfig, x, positions, *, with_cache=False):
+    """Chunkwise-parallel form: O(S·Q) memory instead of O(S²)."""
+    d_in, H, Dh = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    up = x @ params["w_up"]
+    x_m, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv(x_m, params["conv_w"]))
+    q, k = _mlstm_qkv_gates(params, xc)
+    v = jnp.einsum("bsc,che->bshe", x_m, params["wv"])
+
+    logi = (xc.astype(jnp.float32) @ params["wi"]) + params["bi"]  # (B,S,H)
+    logf = jax.nn.log_sigmoid(
+        (xc.astype(jnp.float32) @ params["wf"]) + params["bf"])
+
+    Q = min(_MLSTM_CHUNK, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        zpad = lambda a, val=0.0: jnp.pad(
+            a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+            constant_values=val)
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        logi = zpad(logi, -30.0)     # padded steps: no input
+        logf = zpad(logf, 0.0)       # keep state
+    chunked = tuple(a.reshape(B, nc, Q, *a.shape[2:]).swapaxes(0, 1)
+                    for a in (q, k, v, logi, logf))
+    zeros = jnp.zeros((B, H, Dh), jnp.float32)
+    carry0 = (jnp.zeros((B, H, Dh, Dh), jnp.float32), zeros,
+              jnp.zeros((B, H), jnp.float32) - 30.0)
+    step = jax.remat(lambda c, i: _mlstm_chunk_step(c, i, Dh),
+                     prevent_cse=False)
+    (C, n, m), hs = jax.lax.scan(step, carry0, chunked)
+    h = hs.swapaxes(0, 1).reshape(B, nc * Q, d_in)[:, :S].astype(x.dtype)
+    h = h * params["out_norm"]
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+    if not with_cache:
+        return out, None
+    cache = {"C": C, "n": n, "m": m, "conv": x_m[:, -3:, :]}
+    return out, cache
+
+
+def mlstm_decode(params, cfg: ModelConfig, x, cache, pos):
+    d_in, H, Dh = mlstm_dims(cfg)
+    B = x.shape[0]
+    up = x[:, 0] @ params["w_up"]
+    x_m, z = jnp.split(up, 2, axis=-1)
+    xc_t, conv_buf = causal_conv_step(x_m, cache["conv"], params["conv_w"])
+    xc = jax.nn.silu(xc_t)
+    q = jnp.einsum("bc,che->bhe", xc, params["wq"])
+    k = jnp.einsum("bc,che->bhe", xc, params["wk"])
+    v = jnp.einsum("bc,che->bhe", x_m, params["wv"])
+
+    logi = (xc.astype(jnp.float32) @ params["wi"]) + params["bi"]  # (B,H)
+    logf = jax.nn.log_sigmoid((xc.astype(jnp.float32) @ params["wf"])
+                              + params["bf"])
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    f_s = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    i_s = jnp.exp(logi - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    C = f_s[..., None] * cache["C"] + i_s[..., None] * jnp.einsum(
+        "bhe,bhf->bhef", kf, v.astype(jnp.float32))
+    n = f_s * cache["n"] + i_s * kf
+    qf = q.astype(jnp.float32) / math.sqrt(Dh)
+    num = jnp.einsum("bhef,bhe->bhf", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, d_in).astype(x.dtype)
+    h = h * params["out_norm"]
+    out = ((h * jax.nn.silu(z)) @ params["w_down"])[:, None]
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_buf}
+
+
+def mlstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    d_in, H, Dh = mlstm_dims(cfg)
+    bspec = ("pod", "data")
+    return {
+        "C": ParamDef((batch, H, Dh, Dh), jnp.float32,
+                      P(bspec, MODEL_AXIS, None, None), init="zeros"),
+        "n": ParamDef((batch, H, Dh), jnp.float32,
+                      P(bspec, MODEL_AXIS, None), init="zeros"),
+        "m": ParamDef((batch, H), jnp.float32, P(bspec, MODEL_AXIS),
+                      init="zeros"),
+        "conv": ParamDef((batch, 3, d_in), cfg.param_dtype,
+                         P(bspec, None, MODEL_AXIS), init="zeros"),
+    }
+
+
+# =========================================================================== #
+# sLSTM (xLSTM scalar-memory cell with recurrent gating)
+# =========================================================================== #
+def slstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    return cfg.d_model, H, cfg.d_model // H
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d, H, Dh = slstm_dims(cfg)
+    dt = cfg.param_dtype
+    ff = int(cfg.xlstm.slstm_proj_factor * d)
+    ff = -(-ff // 64) * 64
+    return {
+        # input projections for gates i, f, z, o
+        "w_in": ParamDef((4, d, H, Dh), jnp.float32,
+                         P(None, None, MODEL_AXIS, None), scale=0.02),
+        # block-diagonal recurrent projections (per head)
+        "r": ParamDef((4, H, Dh, Dh), jnp.float32,
+                      P(None, MODEL_AXIS, None, None), scale=0.02),
+        "b": ParamDef((4, H, Dh), jnp.float32, P(None, MODEL_AXIS, None),
+                      init="zeros"),
+        "out_norm": ParamDef((d,), dt, P(None), init="ones"),
+        # post-cell gated FFN (proj factor 4/3)
+        "ffn_gate": ParamDef((d, ff), dt, P(None, MODEL_AXIS)),
+        "ffn_up": ParamDef((d, ff), dt, P(None, MODEL_AXIS)),
+        "ffn_down": ParamDef((ff, d), dt, P(MODEL_AXIS, None)),
+    }
+
+
+def _slstm_step(params, carry, g_in):
+    """carry: (c, n, m, h) each (B, H, Dh); g_in: (B, 4, H, Dh).
+
+    The recurrent projection is written as four per-gate batch matmuls
+    rather than one 4-D einsum: GSPMD fails to propagate batch sharding
+    through the "bhe,ghef->bghf" transpose inside the time scan and falls
+    back to a full rematerialization — one 8 MB all-gather *per time step*
+    (measured 206 GB/chip/step on xlstm-1.3b; EXPERIMENTS.md §Perf pair 2)."""
+    from repro.common.sharding import shard
+    c, n, m, h = carry
+    rec = jnp.stack([jnp.einsum("bhe,hef->bhf", h, params["r"][g])
+                     for g in range(4)], axis=1)
+    rec = shard(rec, ("pod", "data"), None, None, None)
+    g = g_in + rec + params["b"]
+    gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + m, gi)
+    i_s = jnp.exp(gi - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(gz)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    # pin the carry sharding: GSPMD otherwise picks a last-dim sharding for
+    # the loop state and all-gathers h over batch EVERY time step (measured
+    # 206 GB/chip/step on xlstm-1.3b; §Perf pair 2)
+    bspec = (("pod", "data"), None, None)
+    c_new, n_new, h_new = (shard(t, *bspec) for t in (c_new, n_new, h_new))
+    m_new = shard(m_new, ("pod", "data"), None)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(params, cfg: ModelConfig, x, positions, *, with_cache=False):
+    from repro.common.sharding import shard
+    d, H, Dh = slstm_dims(cfg)
+    B, S, _ = x.shape
+    zeros = jnp.zeros((B, H, Dh), jnp.float32)
+    if getattr(cfg, "use_slstm_kernel", False):
+        from repro.kernels.slstm_scan.ops import slstm_scan
+        g_bs = jnp.einsum("bsd,gdhe->bsghe", x.astype(jnp.float32),
+                          params["w_in"])                    # (B,S,4,H,Dh)
+        st0 = {"c": zeros, "n": zeros, "m": zeros - 30.0, "h": zeros}
+        hs_b, fin = slstm_scan(g_bs, params["r"], params["b"], st0)
+        h = hs_b.reshape(B, S, d).astype(x.dtype)
+        carry = (fin["c"], fin["n"], fin["m"], fin["h"])
+    else:
+        g_in = jnp.einsum("bsd,gdhe->sbghe", x.astype(jnp.float32),
+                          params["w_in"])                    # (S,B,4,H,Dh)
+        g_in = shard(g_in, None, ("pod", "data"), None, None, None)
+        carry0 = (zeros, zeros, zeros - 30.0, zeros)
+        carry, hs = jax.lax.scan(
+            lambda c, g: _slstm_step(params, c, g), carry0, g_in)
+        h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    h = h * params["out_norm"]
+    y = (jax.nn.silu(h @ params["ffn_gate"]) * (h @ params["ffn_up"])) \
+        @ params["ffn_down"]
+    if not with_cache:
+        return y, None
+    c, n, m, hl = carry
+    return y, {"c": c, "n": n, "m": m, "h": hl}
+
+
+def slstm_decode(params, cfg: ModelConfig, x, cache, pos):
+    d, H, Dh = slstm_dims(cfg)
+    B = x.shape[0]
+    g_in = jnp.einsum("bd,gdhe->bghe", x[:, 0].astype(jnp.float32),
+                      params["w_in"])
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    (c, n, m, hl), h = _slstm_step(params, carry, g_in)
+    h = h.reshape(B, d).astype(x.dtype) * params["out_norm"]
+    y = (jax.nn.silu(h @ params["ffn_gate"]) * (h @ params["ffn_up"])) \
+        @ params["ffn_down"]
+    return y[:, None], {"c": c, "n": n, "m": m, "h": hl}
+
+
+def slstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    _, H, Dh = slstm_dims(cfg)
+    pd = lambda init: ParamDef((batch, H, Dh), jnp.float32,
+                               P(("pod", "data"), MODEL_AXIS, None), init=init)
+    return {"c": pd("zeros"), "n": pd("zeros"), "m": pd("zeros"),
+            "h": pd("zeros")}

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (Optimizer, adamw, apply_updates,
+                                    clip_by_global_norm, sgd)
+from repro.optim.schedules import (constant_schedule, cosine_schedule,
+                                   warmup_cosine)
+
+__all__ = ["Optimizer", "sgd", "adamw", "apply_updates",
+           "clip_by_global_norm", "constant_schedule", "cosine_schedule",
+           "warmup_cosine"]

@@ -1,0 +1,20 @@
+import os
+import sys
+
+# tests run single-device (the dry-run alone uses 512 placeholder devices —
+# it sets XLA_FLAGS itself, in a subprocess)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def np_rng():
+    return np.random.default_rng(0)

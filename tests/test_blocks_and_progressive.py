@@ -1,0 +1,122 @@
+"""Block planning + progressive engine invariants (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common import paramdef as PD
+from repro.core import CurriculumHP, make_plan, make_stage_step, \
+    make_transformer_adapter
+from repro.core.blocks import unit_block_id
+from repro.models.config import ModelConfig
+from repro.optim import sgd
+
+
+@given(units=st.integers(1, 64), stages=st.integers(1, 12),
+       boundary=st.integers(0, 3))
+def test_plan_partitions_units(units, stages, boundary):
+    plan = make_plan(units, stages, boundary)
+    # bounds tile [0, units) exactly
+    assert plan.bounds[0][0] == 0
+    assert plan.bounds[-1][1] == units
+    for (s0, e0), (s1, e1) in zip(plan.bounds[:-1], plan.bounds[1:]):
+        assert e0 == s1 and e0 > s0
+    # near-equal block sizes
+    sizes = plan.block_sizes
+    assert max(sizes) - min(sizes) <= 1
+    # every unit belongs to exactly one block
+    for u in range(units):
+        t = unit_block_id(plan, u)
+        s, e = plan.bounds[t]
+        assert s <= u < e
+
+
+@given(units=st.integers(2, 32), stages=st.integers(2, 8))
+def test_stage_ranges_cover(units, stages):
+    plan = make_plan(units, stages, boundary_units=1)
+    for t in range(plan.num_stages):
+        (f0, f1), (b0, b1), (a0, a1) = plan.stage_ranges(t)
+        assert f0 == 0 and f1 == b0 and b1 == a0
+        assert (a0, a1) == plan.bounds[t]
+        if t == 0:
+            assert b1 - b0 == 0        # no boundary for the first block
+        else:
+            assert 0 <= b1 - b0 <= 1
+
+
+def _tiny_adapter(num_stages=4):
+    cfg = ModelConfig(name="t", family="dense", num_layers=8, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32")
+    return make_transformer_adapter(cfg, num_stages=num_stages)
+
+
+def test_split_merge_roundtrip():
+    ad = _tiny_adapter()
+    params = ad.init_params(jax.random.PRNGKey(0))
+    for t in range(ad.plan.num_stages):
+        frozen, trainable = ad.split_stage(params, t)
+        merged = ad.merge_stage(params, trainable, t)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(merged)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_frozen_params_not_updated_by_stage_step():
+    ad = _tiny_adapter()
+    params = ad.init_params(jax.random.PRNGKey(0))
+    t = 2
+    frozen, trainable = ad.split_stage(params, t)
+    opt = sgd(0.1)
+    step = make_stage_step(ad, opt, CurriculumHP(mu=0.0), t)
+    batch = {"inputs": {"tokens": jnp.zeros((2, 8), jnp.int32)},
+             "labels": jnp.ones((2, 8), jnp.int32)}
+    st_, tr2, _ = step(opt.init(trainable), trainable, frozen, batch,
+                       trainable)
+    merged = ad.merge_stage(params, tr2, t)
+    # prefix layers before the boundary must be bit-identical
+    (f0, f1), (b0, b1), (a0, a1) = ad.plan.stage_ranges(t)
+    old = jax.tree.leaves(jax.tree.map(lambda x: x[f0:f1],
+                                       params["model"]["layers"]))
+    new = jax.tree.leaves(jax.tree.map(lambda x: x[f0:f1],
+                                       merged["model"]["layers"]))
+    for a, b in zip(old, new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # active layers must have changed
+    olda = np.concatenate([np.asarray(x[a0:a1]).ravel() for x in
+                           jax.tree.leaves(params["model"]["layers"])])
+    newa = np.concatenate([np.asarray(x[a0:a1]).ravel() for x in
+                           jax.tree.leaves(merged["model"]["layers"])])
+    assert not np.allclose(olda, newa)
+
+
+def test_stage_loss_decreases_on_fixed_batch():
+    ad = _tiny_adapter(num_stages=2)
+    params = ad.init_params(jax.random.PRNGKey(0))
+    opt = sgd(0.2)
+    batch = {"inputs": {"tokens": jnp.arange(16, dtype=jnp.int32
+                                             ).reshape(2, 8) % 64},
+             "labels": (jnp.arange(16, dtype=jnp.int32).reshape(2, 8) + 1)
+             % 64}
+    for t in range(2):
+        frozen, trainable = ad.split_stage(params, t)
+        step = jax.jit(make_stage_step(ad, opt, CurriculumHP(mu=0.0), t))
+        st_ = opt.init(trainable)
+        losses = []
+        for _ in range(10):
+            st_, trainable, m = step(st_, trainable, frozen, batch,
+                                     trainable)
+            losses.append(float(m["ce"]))
+        assert losses[-1] < losses[0], f"stage {t}: {losses}"
+        params = ad.merge_stage(params, trainable, t)
+
+
+def test_surrogate_count_shrinks_with_stage():
+    ad = _tiny_adapter(num_stages=4)
+    params = ad.init_params(jax.random.PRNGKey(0))
+    for t in range(4):
+        _, trainable = ad.split_stage(params, t)
+        if t == 3:
+            assert trainable["surrogates"] is None
+        else:
+            n = jax.tree.leaves(trainable["surrogates"])[0].shape[0]
+            assert n == 3 - t

@@ -1,0 +1,70 @@
+"""CNN zoo + width/depth-scaling baseline mechanics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import paramdef as PD
+from repro.federated.baselines import (_channel_idx, _extract_submodel,
+                                       _WIDTH_LEVELS)
+from repro.models import cnn as C
+
+
+@pytest.mark.parametrize("arch", ["resnet18", "resnet34", "vgg11",
+                                  "squeezenet"])
+def test_cnn_forward_shapes(arch):
+    ccfg = C.CNNConfig(name=arch, arch=arch, num_classes=7, image_size=16)
+    params = PD.init_params(jax.random.PRNGKey(0), C.cnn_defs(ccfg))
+    x = jnp.ones((2, 16, 16, 3))
+    logits = C.cnn_forward(params, ccfg, x)
+    assert logits.shape == (2, 7)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_width_mult_scales_params():
+    full = C.CNNConfig(name="r", arch="resnet18")
+    half = dataclasses.replace(full, width_mult=0.5)
+    nf = PD.nparams(C.cnn_defs(full))
+    nh = PD.nparams(C.cnn_defs(half))
+    assert 0.15 < nh / nf < 0.40         # ~width² scaling
+
+
+def test_channel_idx_rolling():
+    i0 = _channel_idx(8, 0.5, 0)
+    i1 = _channel_idx(8, 0.5, 3)
+    assert list(i0) == [0, 1, 2, 3]
+    assert list(i1) == [3, 4, 5, 6]
+    iw = _channel_idx(8, 0.5, 6)
+    assert list(iw) == [6, 7, 0, 1]       # wraps
+
+
+def test_extract_submodel_runs_forward():
+    ccfg = C.CNNConfig(name="r", arch="resnet18", image_size=16)
+    params = PD.init_params(jax.random.PRNGKey(0), C.cnn_defs(ccfg))
+    sub, maps = _extract_submodel(params, 0.5, 0, ccfg.num_classes, 3)
+    sub_cfg = dataclasses.replace(ccfg, width_mult=0.5)
+    x = jnp.ones((2, 16, 16, 3))
+    logits = C.cnn_forward(sub, sub_cfg, x)
+    assert logits.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_surrogates_downsample():
+    ccfg = C.CNNConfig(name="r", arch="resnet18", image_size=32)
+    bounds = [(0, 3), (3, 5), (5, 7), (7, 9)]
+    sur = C.cnn_surrogate_defs(ccfg, bounds)
+    assert len(sur) == 3
+    params = PD.init_params(jax.random.PRNGKey(0), sur)
+    x = jnp.ones((2, 32, 32, 64))
+    y = C.cnn_apply_surrogates(ccfg, params, x)
+    assert y.shape[1] == 32 // 2 ** 3     # stride-2 per surrogate
+
+
+def test_groupnorm_normalizes():
+    p = {"scale": jnp.ones(8), "bias": jnp.zeros(8)}
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 5, 5, 8)) * 7 + 3
+    y = C.groupnorm(p, x, groups=4)
+    assert abs(float(y.mean())) < 0.1
+    assert abs(float(y.std()) - 1.0) < 0.15

@@ -1,0 +1,87 @@
+"""Curriculum Mentor + Training Harmonizer schedule behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CurriculumHP, lambdas
+from repro.core.curriculum import proximal_term, task_ce
+from repro.core.schedule import (PlateauSchedule, RoundRobinSchedule,
+                                 SequentialSchedule)
+
+
+def test_lambda_schedules_monotone():
+    hp = CurriculumHP(lambda1_max=2.0, lambda2_max=1.0)
+    T = 5
+    l1s, l2s = zip(*[lambdas(hp, t, T) for t in range(T)])
+    assert all(a >= b for a, b in zip(l1s, l1s[1:]))       # λ1 decreasing
+    assert all(a <= b for a, b in zip(l2s, l2s[1:]))       # λ2 increasing
+    assert l1s[0] == 2.0 and abs(l2s[-1] - 1.0) < 1e-9
+    assert l1s[-1] == 0.0
+
+
+def test_proximal_term():
+    a = {"w": jnp.ones(4)}
+    b = {"w": jnp.zeros(4)}
+    assert abs(float(proximal_term(a, b, mu=2.0)) - 4.0) < 1e-6
+    assert float(proximal_term(a, a, mu=2.0)) == 0.0
+    assert float(proximal_term(a, b, mu=0.0)) == 0.0
+
+
+def test_round_robin_cycles():
+    s = RoundRobinSchedule(4)
+    assert [s.stage(r) for r in range(8)] == [0, 1, 2, 3, 0, 1, 2, 3]
+
+
+def test_sequential_grows():
+    s = SequentialSchedule(3, rounds_per_stage=2)
+    assert [s.stage(r) for r in range(8)] == [0, 0, 1, 1, 2, 2, 2, 2]
+
+
+def test_plateau_freezes_on_stall():
+    s = PlateauSchedule(3, patience=2, min_delta=0.01)
+    metrics = [1.0, 0.9, 0.9, 0.9,       # stall -> grow after 2 bad rounds
+               0.5, 0.5, 0.5]
+    stages = []
+    for r, m in enumerate(metrics):
+        stages.append(s.stage(r))
+        s.observe(r, m)
+    assert stages[0] == 0
+    assert max(stages) >= 1              # grew at least once
+    assert stages == sorted(stages)      # never goes backward
+
+
+def test_plateau_respects_improvement():
+    s = PlateauSchedule(2, patience=3, min_delta=0.01)
+    for r in range(10):
+        s.observe(r, 1.0 / (r + 1))      # always improving
+    assert s.stage(10) == 0
+
+
+def test_task_ce_layouts():
+    class Cfg:
+        task = "lm"
+        num_output_heads = 1
+        modality = "text"
+
+    logits = jnp.zeros((2, 4, 8))
+    labels = jnp.zeros((2, 4), jnp.int32)
+    ce = task_ce(logits, labels, Cfg())
+    assert abs(float(ce) - np.log(8)) < 1e-5
+
+    # classify layout
+    class CCfg:
+        task = "classify"
+        num_output_heads = 1
+
+    ce2 = task_ce(jnp.zeros((2, 8)), jnp.zeros((2,), jnp.int32), CCfg())
+    assert abs(float(ce2) - np.log(8)) < 1e-5
+
+    # multi-head (musicgen)
+    class MCfg:
+        task = "lm"
+        num_output_heads = 4
+        modality = "audio"
+
+    ce3 = task_ce(jnp.zeros((2, 4, 4, 8)),
+                  jnp.zeros((2, 4, 4), jnp.int32), MCfg())
+    assert abs(float(ce3) - np.log(8)) < 1e-5

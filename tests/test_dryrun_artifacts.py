@@ -1,0 +1,64 @@
+"""Validates the dry-run artifact set (deliverable e): every (arch × shape ×
+mesh) combination must have lowered + compiled.  Skips when the sweep hasn't
+been run in this checkout."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def _records():
+    recs = {}
+    for p in glob.glob(os.path.join(DRYRUN, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if not r.get("tag"):
+            recs[(r["arch"], r["shape"], r["mesh"], r["mode"])] = r
+    return recs
+
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(DRYRUN) or not glob.glob(os.path.join(DRYRUN, "*.json")),
+    reason="dry-run sweep artifacts not present "
+           "(run python -m repro.launch.dryrun --sweep)")
+
+
+def test_all_pairs_compiled():
+    recs = _records()
+    missing, failed = [], []
+    for arch in ARCH_IDS:
+        for shape, spec in SHAPES.items():
+            mode = {"train": "train", "prefill": "prefill",
+                    "decode": "decode"}[spec.kind]
+            for mesh in ("pod", "multipod"):
+                r = recs.get((arch, shape, mesh, mode))
+                if r is None:
+                    missing.append((arch, shape, mesh))
+                elif not r.get("ok"):
+                    failed.append((arch, shape, mesh, r.get("error")))
+    assert not failed, f"dry-run failures: {failed}"
+    assert len(missing) < 8, f"too many missing combos: {missing}"
+
+
+def test_roofline_terms_present_and_positive():
+    recs = _records()
+    for key, r in recs.items():
+        if not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        assert rf["compute_s"] >= 0 and rf["memory_s"] >= 0
+        assert rf["bottleneck"] in ("compute", "memory", "collective")
+        assert rf["flops_per_chip"] > 0
+
+
+def test_train_shapes_record_collectives():
+    recs = _records()
+    for (arch, shape, mesh, mode), r in recs.items():
+        if mode == "train" and r.get("ok"):
+            assert r["collectives"]["total_bytes"] > 0, \
+                f"{arch} train step with zero collective traffic?"

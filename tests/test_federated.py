@@ -1,0 +1,128 @@
+"""Federated substrate: aggregation properties, partitioning, selection,
+and a tiny end-to-end NeuLite FL round integration test."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import Batcher, dirichlet_partition, iid_partition, \
+    make_image_dataset
+from repro.federated import aggregation as agg
+from repro.federated.devices import sample_devices
+from repro.federated.selection import memory_feasible, random_select
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.core import make_adapter
+from repro.models.cnn import CNNConfig
+
+
+# --------------------------------------------------------------------------- #
+# aggregation properties
+# --------------------------------------------------------------------------- #
+@given(n=st.integers(1, 6), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_weighted_average_convexity(n, seed):
+    rng = np.random.default_rng(seed)
+    trees = [{"w": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal(3), jnp.float32)}
+             for _ in range(n)]
+    weights = rng.uniform(0.1, 10, n)
+    out = agg.weighted_average(trees, weights)
+    for key in ("w", "b"):
+        stack = np.stack([np.asarray(t[key]) for t in trees])
+        assert np.all(np.asarray(out[key]) <= stack.max(0) + 1e-5)
+        assert np.all(np.asarray(out[key]) >= stack.min(0) - 1e-5)
+
+
+def test_weighted_average_identity():
+    tree = {"w": jnp.ones((3, 3))}
+    out = agg.weighted_average([tree, tree, tree], [1, 2, 3])
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-6)
+
+
+def test_weighted_average_weights():
+    t1 = {"w": jnp.zeros(4)}
+    t2 = {"w": jnp.ones(4)}
+    out = agg.weighted_average([t1, t2], [1, 3])
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.75, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# partitioning
+# --------------------------------------------------------------------------- #
+@given(n_clients=st.integers(2, 20), alpha=st.sampled_from([0.1, 1.0, 10.0]))
+@settings(max_examples=10, deadline=None)
+def test_dirichlet_partition_covers_once(n_clients, alpha):
+    labels = np.random.default_rng(0).integers(0, 10, 500)
+    parts = dirichlet_partition(0, labels, n_clients, alpha,
+                                min_samples=0)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(labels)
+    assert set(all_idx.tolist()) == set(range(len(labels)))
+
+
+def test_dirichlet_more_skewed_with_small_alpha():
+    labels = np.random.default_rng(0).integers(0, 10, 2000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(0, labels, 10, alpha, min_samples=0)
+        # mean per-client KL from uniform label distribution
+        kls = []
+        for p in parts:
+            if len(p) == 0:
+                continue
+            hist = np.bincount(labels[p], minlength=10) / len(p)
+            kls.append(np.sum(np.where(hist > 0,
+                                       hist * np.log(hist * 10 + 1e-9), 0)))
+        return np.mean(kls)
+
+    assert skew(0.1) > skew(10.0)
+
+
+def test_iid_partition():
+    parts = iid_partition(0, 100, 7)
+    assert sum(len(p) for p in parts) == 100
+
+
+# --------------------------------------------------------------------------- #
+# devices / selection
+# --------------------------------------------------------------------------- #
+def test_memory_feasible_monotone():
+    devs = sample_devices(0, 50, full_model_bytes=1000)
+    low = memory_feasible(devs, 100)
+    high = memory_feasible(devs, 900)
+    assert set(high) <= set(low)
+
+
+def test_random_select_bounds():
+    rng = np.random.default_rng(0)
+    sel = random_select(rng, list(range(5)), 10)
+    assert len(sel) == 5 and len(set(sel)) == 5
+
+
+# --------------------------------------------------------------------------- #
+# integration: 4 NeuLite rounds on a tiny CNN fleet
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_neulite_server_rounds():
+    ds = make_image_dataset(0, 400, num_classes=4, image_size=8)
+    test = make_image_dataset(1, 128, num_classes=4, image_size=8)
+    parts = dirichlet_partition(0, ds.labels, 8, alpha=1.0)
+    clients = [ds.subset(p) for p in parts]
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    flc = FLConfig(n_devices=8, clients_per_round=3, local_epochs=1,
+                   batch_size=16, num_stages=2, seed=0)
+    ad = make_adapter(ccfg, flc.num_stages)
+    srv = NeuLiteServer(ad, clients, flc,
+                        test_batcher=Batcher(test, 32, kind="image"))
+    hist = srv.run(4)
+    assert len(hist) == 4
+    assert all(np.isfinite(h.mean_loss) for h in hist if h.n_selected)
+    assert all(h.stage == r % 2 for r, h in enumerate(hist))
+    assert srv.participation_rate > 0
+    # uploads cover only the trainable subtree (less than full model bytes)
+    from repro.common import paramdef as PD
+    full_bytes = PD.nbytes(ad.defs["model"])
+    per_client = hist[0].upload_bytes / max(hist[0].n_selected, 1)
+    assert per_client < full_bytes

@@ -1,0 +1,145 @@
+"""Optimizers, checkpointing, data pipeline, memory model."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import latest_checkpoint, load_checkpoint, \
+    save_checkpoint
+from repro.core import make_adapter
+from repro.core.memory import estimate_full_memory, stage_memory_table
+from repro.data import Batcher, make_image_dataset, make_lm_dataset
+from repro.models.cnn import CNNConfig
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------- #
+# optimizers
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("make", [
+    lambda: optim.sgd(0.02, momentum=0.9, weight_decay=0.0),
+    lambda: optim.sgd(0.1, momentum=0.0, weight_decay=0.0),
+    lambda: optim.adamw(0.05, weight_decay=0.0),
+])
+def test_optimizer_converges_quadratic(make):
+    opt = make()
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["x"]))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, updates)
+    assert float(loss(params)) < 1e-2
+
+
+def test_weight_decay_shrinks():
+    opt = optim.sgd(0.1, momentum=0.0, weight_decay=0.5)
+    params = {"x": jnp.asarray([1.0])}
+    state = opt.init(params)
+    updates, _ = opt.update({"x": jnp.asarray([0.0])}, state, params)
+    assert float(updates["x"][0]) < 0  # decay pulls toward zero
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    n2 = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(n2 - 1.0) < 1e-4
+
+
+@given(lr=st.floats(1e-4, 1.0), total=st.integers(10, 1000))
+@settings(max_examples=10, deadline=None)
+def test_cosine_schedule_monotone_decay(lr, total):
+    sched = optim.cosine_schedule(lr, total)
+    vals = [float(sched(s)) for s in range(0, total, max(total // 10, 1))]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert vals[0] <= lr + 1e-6
+
+
+# --------------------------------------------------------------------------- #
+# checkpointing
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "b": [jnp.ones(2), jnp.zeros(3)]}
+    p = save_checkpoint(str(tmp_path), 7, tree, meta={"round": 7})
+    assert latest_checkpoint(str(tmp_path)) == p
+    loaded, meta = load_checkpoint(p, tree)
+    assert meta == {"round": 7}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_rotation(tmp_path):
+    tree = {"w": jnp.zeros(2)}
+    for s in range(6):
+        save_checkpoint(str(tmp_path), s, tree, keep=3)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(files) == 3
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------------- #
+def test_image_dataset_learnable_structure():
+    ds = make_image_dataset(0, 200, num_classes=4, image_size=8)
+    # same-class images correlate more than cross-class
+    same, cross = [], []
+    for c in range(4):
+        idx = np.where(ds.labels == c)[0][:10]
+        other = np.where(ds.labels != c)[0][:10]
+        a = ds.images[idx].reshape(len(idx), -1)
+        b = ds.images[other].reshape(len(other), -1)
+        same.append(np.corrcoef(a)[np.triu_indices(len(idx), 1)].mean())
+        cross.append(np.corrcoef(np.vstack([a[:5], b[:5]]))[:5, 5:].mean())
+    assert np.mean(same) > np.mean(cross)
+
+
+def test_lm_dataset_markov_structure():
+    ds = make_lm_dataset(0, 50, seq_len=64, vocab=512)
+    assert ds.tokens.shape == (50, 65)
+    assert ds.tokens.max() < 512
+
+
+def test_batcher_fixed_shapes():
+    ds = make_image_dataset(0, 50, num_classes=4, image_size=8)
+    b = Batcher(ds, 16, kind="image")
+    shapes = {batch["inputs"]["images"].shape for batch in b.epoch()}
+    assert shapes == {(16, 8, 8, 3)}
+
+
+# --------------------------------------------------------------------------- #
+# memory model (paper's central claim, analytically)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", ["resnet18", "resnet34", "vgg11",
+                                  "squeezenet"])
+def test_stage_memory_below_full(arch):
+    ad = make_adapter(CNNConfig(name=arch, arch=arch), num_stages=4)
+    tab = stage_memory_table(ad, batch=32)
+    full = estimate_full_memory(ad, batch=32)
+    peak = max(e.total for e in tab)
+    assert peak < full.total
+    if arch.startswith("resnet"):
+        # the paper's headline (ResNet): up to 50.4%; demand >= 25% here.
+        # VGG/SqueezeNet keep full-resolution stem activations in block 1,
+        # so their analytic reduction is smaller (matches the paper's
+        # smaller VGG gains).
+        assert peak / full.total < 0.75
+
+
+def test_stage_memory_below_full_transformer():
+    cfg = ModelConfig(name="t", family="dense", num_layers=8, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+                      dtype="float32")
+    ad = make_adapter(cfg, num_stages=4)
+    tab = stage_memory_table(ad, batch=8, seq=64)
+    full = estimate_full_memory(ad, batch=8, seq=64)
+    assert max(e.total for e in tab) < full.total
