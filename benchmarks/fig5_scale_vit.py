@@ -25,8 +25,11 @@ def run_scale(scales=(24, 48), rounds: int = 4, quiet: bool = False):
         clients = [ds.subset(p) for p in parts]
         ccfg = CNNConfig(name="resnet18", arch="resnet18", num_classes=62,
                          image_size=32, width_mult=0.25)
+        # sequential runtime: batched-weight convs (per-cohort params) lower
+        # poorly on CPU XLA; see benchmarks/fl_round_throughput.py
         flc = FLConfig(n_devices=n, clients_per_round=max(n // 10, 2),
-                       local_epochs=1, batch_size=32, num_stages=4, seed=0)
+                       local_epochs=1, batch_size=32, num_stages=4, seed=0,
+                       runtime="sequential")
         srv = NeuLiteServer(make_adapter(ccfg, 4), clients, flc,
                             test_batcher=Batcher(test, 128, kind="image"))
         hist = srv.run(rounds)
@@ -43,8 +46,9 @@ def run_vit(rounds: int = 4, quiet: bool = False):
     parts = dirichlet_partition(0, ds.labels, 16, alpha=1.0)
     clients = [ds.subset(p) for p in parts]
     cfg = vit(num_classes=32, image_size=32, num_layers=6, d_model=96)
+    # the whole ViT cohort round runs as one jitted program per stage
     flc = FLConfig(n_devices=16, clients_per_round=4, local_epochs=1,
-                   batch_size=32, num_stages=3, seed=0)
+                   batch_size=32, num_stages=3, seed=0, runtime="vectorized")
     srv = NeuLiteServer(make_adapter(cfg, 3), clients, flc,
                         test_batcher=Batcher(test, 128, kind="image"))
     hist = srv.run(rounds)

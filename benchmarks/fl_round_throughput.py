@@ -1,0 +1,99 @@
+"""FL round throughput across ClientRuntime backends (paper §Efficiency).
+
+One NeuLite round = C cohorts × E local steps + Eq. 1 aggregation.  The
+sequential reference dispatches C·E jitted steps from Python with a host
+round-trip per client; the vectorized runtime lowers the whole round to one
+program; the sharded runtime runs that program under ``shard_map`` on the
+host mesh.  Reported number = rounds/sec on the same pre-materialized
+cohort batch stack (data pipeline excluded), for the paper's CNN
+(ResNet18) and transformer (ViT) at CPU-benchmark scale.
+
+  PYTHONPATH=src python -m benchmarks.fl_round_throughput [--cohorts 16]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_row, timeit
+
+
+def _setup(kind: str, num_cohorts: int, batch_size: int, local_steps: int,
+           seed: int = 0):
+    import jax
+    import numpy as np
+    from repro.configs.paper_models import resnet18, vit
+    from repro.core import CurriculumHP, make_adapter
+    from repro.data import Batcher, iid_partition, make_image_dataset
+    from repro.data.loader import stack_round
+    from repro.optim import sgd
+
+    if kind == "cnn":
+        cfg = resnet18(num_classes=10, image_size=8, width_mult=0.0625)
+        image_size = 8
+    else:
+        cfg = vit(num_classes=10, image_size=16, num_layers=4, d_model=64)
+        image_size = 16
+    adapter = make_adapter(cfg, num_stages=4)
+    params = adapter.init_params(jax.random.PRNGKey(seed))
+
+    n = num_cohorts * batch_size * local_steps
+    ds = make_image_dataset(seed, n, num_classes=10, image_size=image_size)
+    parts = iid_partition(seed, n, num_cohorts)
+    batchers = [Batcher(ds.subset(p), batch_size, seed=seed + i,
+                        kind="image")
+                for i, p in enumerate(parts)]
+    stack = stack_round(batchers, range(num_cohorts),
+                        local_steps=local_steps)
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    return adapter, params, opt, hp, stack
+
+
+def bench(kind: str, num_cohorts: int = 16, batch_size: int = 4,
+          local_steps: int = 2, stage: int = 1, iters: int = 3):
+    """rounds/sec per backend on one stage-t round; returns {name: r/s}."""
+    import jax
+    from repro.federated.runtime import RUNTIMES
+
+    adapter, params, opt, hp, stack = _setup(kind, num_cohorts, batch_size,
+                                             local_steps)
+    out = {}
+    for name, cls in RUNTIMES.items():
+        runtime = cls(adapter, opt, hp)
+
+        def one_round(rt=runtime):
+            new_tr, metrics = rt.run_stacked(params, stage, stack)
+            return jax.tree.leaves(new_tr)[0], metrics["mean_local_loss"]
+
+        out[name] = 1.0 / timeit(one_round, warmup=1, iters=iters)
+    return out
+
+
+def quick():
+    for kind in ("cnn", "transformer"):
+        rps = bench(kind, num_cohorts=16, batch_size=4, local_steps=2)
+        base = rps["sequential"]
+        for name, r in rps.items():
+            csv_row(f"fl_round_{kind}_{name}", 1e6 / r,
+                    f"{r:.2f}r/s x{r / base:.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cohorts", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--stage", type=int, default=1)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    print(f"{'model':12s} {'backend':12s} {'rounds/s':>9s} {'speedup':>8s}")
+    for kind in ("cnn", "transformer"):
+        rps = bench(kind, args.cohorts, args.batch, args.steps, args.stage,
+                    args.iters)
+        base = rps["sequential"]
+        for name, r in rps.items():
+            print(f"{kind:12s} {name:12s} {r:9.2f} {r / base:7.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,12 +18,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def main() -> None:
     from benchmarks import (fig2_hsic_plane, fig5_scale_vit, fig6_memory,
-                            fig7_time, fig8_ablation, kernels_bench,
-                            roofline, table1_accuracy, table2_complexity)
+                            fig7_time, fig8_ablation, fl_round_throughput,
+                            kernels_bench, roofline, table1_accuracy,
+                            table2_complexity)
     print("name,us_per_call,derived")
-    for mod in (fig6_memory, fig7_time, roofline, kernels_bench,
-                fig2_hsic_plane, table2_complexity, fig8_ablation,
-                fig5_scale_vit, table1_accuracy):
+    for mod in (fig6_memory, fig7_time, fl_round_throughput, roofline,
+                kernels_bench, fig2_hsic_plane, table2_complexity,
+                fig8_ablation, fig5_scale_vit, table1_accuracy):
         try:
             mod.quick()
         except Exception as e:  # benchmark failures shouldn't hide others

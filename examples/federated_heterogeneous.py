@@ -23,8 +23,12 @@ parts = dirichlet_partition(0, ds.labels, 30, alpha=1.0)
 clients = [ds.subset(p) for p in parts]
 ccfg = CNNConfig(name="resnet18", arch="resnet18", image_size=16,
                  width_mult=0.5)
+# runtime selects how the cohort executes: "sequential" (reference Python
+# loop — right for this CPU-scale CNN), "vectorized" (whole cohort as one
+# jitted program), or "sharded" (cohort axis over a device mesh).
 flc = FLConfig(n_devices=30, clients_per_round=5, local_epochs=1,
-               batch_size=32, num_stages=4, seed=0, rounds_per_stage=2)
+               batch_size=32, num_stages=4, seed=0, rounds_per_stage=2,
+               runtime="sequential")
 
 print("== NeuLite (progressive, curriculum, co-adaptation) ==")
 srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients, flc,

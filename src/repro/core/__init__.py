@@ -12,17 +12,19 @@
 """
 from repro.core.blocks import BlockPlan, make_plan
 from repro.core.curriculum import CurriculumHP, curriculum_loss, lambdas
-from repro.core.progressive import (Adapter, make_adapter,
-                                    make_cnn_adapter, make_full_step,
-                                    make_stage_loss, make_stage_step,
+from repro.core.progressive import (Adapter, jit_full_step, jit_stage_step,
+                                    make_adapter, make_cnn_adapter,
+                                    make_full_step, make_stage_loss,
+                                    make_stage_step,
                                     make_transformer_adapter, neulite_defs)
 from repro.core.schedule import (PlateauSchedule, RoundRobinSchedule,
                                  SequentialSchedule, StageSchedule)
 
 __all__ = [
     "BlockPlan", "make_plan", "CurriculumHP", "curriculum_loss", "lambdas",
-    "Adapter", "make_adapter", "make_cnn_adapter", "make_full_step",
-    "make_stage_loss", "make_stage_step", "make_transformer_adapter",
-    "neulite_defs", "PlateauSchedule", "RoundRobinSchedule",
-    "SequentialSchedule", "StageSchedule",
+    "Adapter", "jit_full_step", "jit_stage_step", "make_adapter",
+    "make_cnn_adapter", "make_full_step", "make_stage_loss",
+    "make_stage_step", "make_transformer_adapter", "neulite_defs",
+    "PlateauSchedule", "RoundRobinSchedule", "SequentialSchedule",
+    "StageSchedule",
 ]

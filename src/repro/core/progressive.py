@@ -232,7 +232,12 @@ def make_stage_step(adapter: Adapter, optimizer, hp: cur.CurriculumHP,
                     t: int, *, pmean_axis: Optional[str] = None):
     """Returns train_step(opt_state, trainable, frozen, batch, global_ref)
     -> (opt_state, trainable, metrics).  If ``pmean_axis`` is given the
-    gradients are averaged over that mesh axis (used under shard_map)."""
+    gradients are averaged over that mesh axis (used under shard_map).
+
+    The signature is donation-friendly: the carried state (opt_state,
+    trainable) leads and maps positionally onto the first two outputs, so
+    ``jax.jit(step, donate_argnums=(0, 1))`` lets XLA update both in place.
+    See ``jit_stage_step`` for the safe default."""
     loss_fn = make_stage_loss(adapter, hp, t)
     from repro.optim import apply_updates
 
@@ -250,9 +255,35 @@ def make_stage_step(adapter: Adapter, optimizer, hp: cur.CurriculumHP,
     return train_step
 
 
+def jit_stage_step(adapter: Adapter, optimizer, hp: cur.CurriculumHP, t: int,
+                   *, donate: bool = True, donate_trainable: bool = False,
+                   pmean_axis: Optional[str] = None):
+    """``make_stage_step`` jitted with buffer donation.
+
+    ``opt_state`` (argnum 0) is donated by default — it is threaded through
+    the local-training loop and never read again, so XLA reuses its buffers
+    (the optimizer-state share of the paper's client memory budget).
+    ``trainable`` (argnum 1) is only donated on request: FL callers routinely
+    alias it with ``global_ref`` / the server's full param tree on the first
+    local step, and donating an aliased buffer invalidates the other view.
+    """
+    step = make_stage_step(adapter, optimizer, hp, t, pmean_axis=pmean_axis)
+    donate = donate and donation_supported()
+    donate_argnums = ((0, 1) if donate_trainable else (0,)) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+def donation_supported() -> bool:
+    """CPU XLA ignores donation and warns per compile — skip it there."""
+    return jax.default_backend() != "cpu"
+
+
 def make_full_step(adapter: Adapter, optimizer, *,
                    pmean_axis: Optional[str] = None):
-    """End-to-end (vanilla FL / FedAvg) train step over the full model."""
+    """End-to-end (vanilla FL / FedAvg) train step over the full model.
+
+    Donation-friendly like ``make_stage_step``: (opt_state, params) lead and
+    map onto the first two outputs (see ``jit_full_step``)."""
     from repro.optim import apply_updates
 
     def train_step(opt_state, params, batch):
@@ -265,3 +296,14 @@ def make_full_step(adapter: Adapter, optimizer, *,
         return opt_state, params, {"loss": loss}
 
     return train_step
+
+
+def jit_full_step(adapter: Adapter, optimizer, *, donate: bool = True,
+                  donate_params: bool = False,
+                  pmean_axis: Optional[str] = None):
+    """``make_full_step`` jitted with opt-state (and optionally param)
+    donation — same aliasing caveats as ``jit_stage_step``."""
+    step = make_full_step(adapter, optimizer, pmean_axis=pmean_axis)
+    donate = donate and donation_supported()
+    donate_argnums = ((0, 1) if donate_params else (0,)) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)

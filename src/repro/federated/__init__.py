@@ -1,9 +1,14 @@
 from repro.federated.aggregation import weighted_average
 from repro.federated.devices import DeviceProfile, sample_devices
+from repro.federated.runtime import (ClientRuntime, RoundOutcome,
+                                     SequentialRuntime, ShardedRuntime,
+                                     VectorizedRuntime, make_runtime)
 from repro.federated.selection import (memory_feasible, oort_select,
                                        random_select, tifl_select)
 from repro.federated.server import FLConfig, NeuLiteServer, RoundResult
 
 __all__ = ["weighted_average", "DeviceProfile", "sample_devices",
            "memory_feasible", "random_select", "tifl_select", "oort_select",
-           "FLConfig", "NeuLiteServer", "RoundResult"]
+           "FLConfig", "NeuLiteServer", "RoundResult", "ClientRuntime",
+           "RoundOutcome", "SequentialRuntime", "VectorizedRuntime",
+           "ShardedRuntime", "make_runtime"]

@@ -6,7 +6,7 @@ aggregation (and its communication volume) covers the active block only.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -14,14 +14,19 @@ import numpy as np
 
 
 def weighted_average(trees: Sequence, weights: Sequence[float]):
+    """One stacked einsum per leaf (single fused contraction over the
+    client axis) instead of leaf-by-leaf Python accumulation."""
     w = np.asarray(weights, np.float64)
-    w = w / w.sum()
+    total = w.sum()
+    if not np.isfinite(total) or total <= 0:
+        raise ValueError(
+            f"weighted_average needs a positive finite weight sum; "
+            f"got sum({np.asarray(weights).tolist()}) = {total}")
+    wj = jnp.asarray(w / total, jnp.float32)
 
     def avg(*leaves):
-        acc = leaves[0].astype(jnp.float32) * w[0]
-        for wi, leaf in zip(w[1:], leaves[1:]):
-            acc = acc + leaf.astype(jnp.float32) * wi
-        return acc.astype(leaves[0].dtype)
+        stack = jnp.stack([leaf.astype(jnp.float32) for leaf in leaves])
+        return jnp.einsum("c...,c->...", stack, wj).astype(leaves[0].dtype)
 
     return jax.tree.map(avg, *trees)
 

@@ -184,7 +184,7 @@ class Oort(_Base):
                            self.flc.clients_per_round, self.oort, r)
 
     def _post_client(self, cid, res, r):
-        oort_update(self.oort, cid, res.mean_loss, r)
+        oort_update(self.oort, cid, float(res.mean_loss), r)
 
 
 class AllSmall(_Base):

@@ -1,11 +1,15 @@
-"""Client-side local training (paper: 5 local epochs of SGD, Eq. 5 loss)."""
+"""Client-side local training (paper: 5 local epochs of SGD, Eq. 5 loss).
+
+Per-step losses stay ON DEVICE: the hot loop enqueues jitted steps without
+blocking, and the round's loss summary is one scalar the caller pulls to the
+host at round end (``float(result.mean_loss)``) — not one sync per batch.
+"""
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable
 
-import jax
-import numpy as np
+import jax.numpy as jnp
 
 from repro.data.loader import Batcher
 
@@ -13,9 +17,16 @@ from repro.data.loader import Batcher
 @dataclasses.dataclass
 class ClientResult:
     trainable: Any
-    num_samples: int
-    mean_loss: float
+    num_samples: int          # true sample count (no wraparound duplicates)
+    mean_loss: Any            # 0-d device array; host-sync it at round end
     num_batches: int
+
+
+def _result(trainable, batcher: Batcher, losses, nb) -> ClientResult:
+    n = getattr(batcher, "num_samples", len(batcher.ds))
+    mean = jnp.stack(losses).mean() if losses else jnp.zeros(())
+    return ClientResult(trainable=trainable, num_samples=int(n),
+                        mean_loss=mean, num_batches=nb)
 
 
 def run_local_training(step_fn: Callable, optimizer, trainable, frozen,
@@ -29,11 +40,9 @@ def run_local_training(step_fn: Callable, optimizer, trainable, frozen,
         for batch in batcher.epoch():
             opt_state, trainable, metrics = step_fn(
                 opt_state, trainable, frozen, batch, gref)
-            losses.append(float(metrics["loss"]))
+            losses.append(metrics["loss"])
             nb += 1
-    return ClientResult(trainable=trainable, num_samples=len(batcher.ds),
-                        mean_loss=float(np.mean(losses)) if losses else 0.0,
-                        num_batches=nb)
+    return _result(trainable, batcher, losses, nb)
 
 
 def run_local_training_full(step_fn: Callable, optimizer, params,
@@ -45,8 +54,6 @@ def run_local_training_full(step_fn: Callable, optimizer, params,
     for _ in range(local_epochs):
         for batch in batcher.epoch():
             opt_state, params, metrics = step_fn(opt_state, params, batch)
-            losses.append(float(metrics["loss"]))
+            losses.append(metrics["loss"])
             nb += 1
-    return ClientResult(trainable=params, num_samples=len(batcher.ds),
-                        mean_loss=float(np.mean(losses)) if losses else 0.0,
-                        num_batches=nb)
+    return _result(params, batcher, losses, nb)

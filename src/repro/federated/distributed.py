@@ -1,82 +1,10 @@
-"""Pod-scale FL round as a single jit-able program.
+"""DEPRECATED shim — the pod-scale FL round moved into federated.runtime.
 
-The Python-loop server (server.py) simulates clients sequentially — right
-for CPU testbeds, wrong for a pod.  Here one *round* of NeuLite FL lowers
-to a single pjit program:
-
-  * cohorts (simulated clients) are vmapped — the cohort axis shards over
-    ("pod","data"), so every cohort runs its E local steps **without any
-    cross-cohort communication** (exactly FL semantics: no gradient sync
-    during local training);
-  * the weighted FedAvg aggregation (paper Eq. 1) of the *trainable
-    subtree only* becomes the one cross-cohort collective of the round —
-    the all-reduce the dry-run's §Roofline measures as the paper's
-    communication saving.
-
-``make_fl_round_step(adapter, optimizer, hp, t, local_steps)`` returns
-round_fn(trainable, frozen, batches, weights) -> (new_trainable, metrics)
-  trainable : global params of stage t (replicated across cohorts)
-  batches   : pytree with leading (C, E, ...) axes — C cohorts × E local
-              steps of per-cohort data
-  weights   : (C,) aggregation weights (|D_c|)
+The vmapped round step and its dry-run specs now live on the unified
+``ClientRuntime`` path (``VectorizedRuntime`` / ``ShardedRuntime``); this
+module only re-exports the legacy names for older callers.
 """
-from __future__ import annotations
+from repro.federated.runtime import (cohort_batches_specs,  # noqa: F401
+                                     make_fl_round_step)
 
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.curriculum import CurriculumHP
-from repro.core.progressive import Adapter, make_stage_loss
-from repro.optim import apply_updates
-
-
-def make_fl_round_step(adapter: Adapter, optimizer, hp: CurriculumHP,
-                       t: int, local_steps: int):
-    loss_fn = make_stage_loss(adapter, hp, t)
-
-    def local_training(trainable0, frozen, cohort_batches):
-        """E local steps on one cohort's shards — no cross-cohort comms."""
-        opt_state0 = optimizer.init(trainable0)
-
-        def step(carry, batch):
-            opt_state, trainable = carry
-            (loss, _), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(trainable, frozen, batch, trainable0)
-            updates, opt_state = optimizer.update(grads, opt_state,
-                                                  trainable)
-            trainable = apply_updates(trainable, updates)
-            return (opt_state, trainable), loss
-
-        (_, trainable), losses = jax.lax.scan(
-            step, (opt_state0, trainable0), cohort_batches)
-        return trainable, losses.mean()
-
-    def round_fn(trainable, frozen, batches, weights):
-        locals_, losses = jax.vmap(
-            local_training, in_axes=(None, None, 0))(trainable, frozen,
-                                                     batches)
-        w = (weights / weights.sum()).astype(jnp.float32)
-        # Eq. 1: weighted FedAvg over the trainable subtree only — this
-        # einsum over the cohort axis is the round's one all-reduce
-        new_trainable = jax.tree.map(
-            lambda l: jnp.einsum("c...,c->...", l.astype(jnp.float32),
-                                 w).astype(l.dtype), locals_)
-        return new_trainable, {"mean_local_loss": jnp.sum(losses * w)}
-
-    return round_fn
-
-
-def cohort_batches_specs(cfg, num_cohorts: int, local_steps: int,
-                         per_cohort_batch: int, seq: int):
-    """ShapeDtypeStruct tree for the (C, E, ...) batch stack (dry-run)."""
-    from repro.configs import label_specs, token_inputs
-
-    def stack(sds):
-        return jax.ShapeDtypeStruct(
-            (num_cohorts, local_steps, *sds.shape), sds.dtype)
-
-    inputs = jax.tree.map(stack, token_inputs(cfg, per_cohort_batch, seq))
-    labels = jax.tree.map(stack, label_specs(cfg, per_cohort_batch, seq))
-    return {"inputs": inputs, "labels": labels}
+__all__ = ["make_fl_round_step", "cohort_batches_specs"]

@@ -1,0 +1,370 @@
+"""ClientRuntime: pluggable execution engines for one NeuLite FL round.
+
+One round (paper Alg. 1, lines 4-10) = split stage-t params, run E local
+steps on each selected client with **no cross-cohort communication**, then
+weighted-FedAvg (Eq. 1) the trainable subtree.  The three backends execute
+those identical semantics at different points on the throughput curve:
+
+  SequentialRuntime — reference Python loop; one jitted stage step per batch,
+                      clients simulated one-by-one (CPU testbeds, debugging).
+  VectorizedRuntime — ONE jitted program per stage: cohort-vmapped
+                      ``lax.scan`` local training fused with the Eq. 1
+                      aggregation einsum (the round's single collective).
+  ShardedRuntime    — the same program under ``shard_map`` over a launch
+                      mesh; the cohort axis shards across devices and the
+                      aggregation lowers to one ``psum`` — the all-reduce
+                      the roofline dry-run measures.
+
+All backends consume a ``RoundStack`` (``data.loader.stack_round``): a
+(C, E, ...) batch stack plus a (C, E) step mask.  The mask preserves the
+sequential semantics exactly — cohorts with smaller datasets run fewer true
+steps; padded steps are no-ops for params *and* optimizer state — so the
+vectorized paths are numerically equivalent to the reference loop (same
+post-round params up to dtype tolerance), not a fork of the semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.curriculum import CurriculumHP
+from repro.core.progressive import Adapter, jit_stage_step, make_stage_loss
+from repro.data.loader import Batcher, RoundStack, stack_round
+from repro.federated import aggregation as agg
+from repro.federated.client import run_local_training
+from repro.optim import apply_updates
+
+
+# =========================================================================== #
+# the round program (one jit-able function per stage)
+# =========================================================================== #
+def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
+                       *, axis: Optional[str] = None):
+    """round_fn(trainable, frozen, batches, weights, step_mask)
+         -> (new_trainable, metrics)
+
+    trainable : stage-t global trainable subtree (replicated across cohorts)
+    batches   : pytree with leading (C, E, ...) axes
+    weights   : (C,) Eq. 1 aggregation weights (true |D_c|)
+    step_mask : (C, E) bool — False steps are exact no-ops
+
+    With ``axis`` set the program is written for ``shard_map``: the cohort
+    axis is device-local and the aggregation / loss reductions become
+    ``psum`` collectives over that mesh axis.
+    """
+    loss_fn = make_stage_loss(adapter, hp, t)
+
+    def local_training(trainable0, frozen, cohort_batches, cohort_mask):
+        """E masked local steps on one cohort — no cross-cohort comms."""
+        opt_state0 = optimizer.init(trainable0)
+
+        def step(carry, xs):
+            batch, keep = xs
+            opt_state, trainable = carry
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(trainable, frozen, batch, trainable0)
+            updates, new_opt = optimizer.update(grads, opt_state, trainable)
+            new_tr = apply_updates(trainable, updates)
+            sel = lambda new, old: jnp.where(keep, new, old)
+            carry = (jax.tree.map(sel, new_opt, opt_state),
+                     jax.tree.map(sel, new_tr, trainable))
+            return carry, jnp.where(keep, loss, 0.0)
+
+        (_, trainable), losses = jax.lax.scan(
+            step, (opt_state0, trainable0), (cohort_batches, cohort_mask))
+        n = jnp.maximum(cohort_mask.sum(), 1)
+        return trainable, losses.sum() / n
+
+    def round_fn(trainable, frozen, batches, weights, step_mask):
+        locals_, losses = jax.vmap(
+            local_training, in_axes=(None, None, 0, 0))(
+                trainable, frozen, batches, step_mask)
+        total = weights.sum().astype(jnp.float32)
+        if axis is not None:
+            total = jax.lax.psum(total, axis)
+        w = weights.astype(jnp.float32) / jnp.maximum(total, 1e-12)
+        # Eq. 1: weighted FedAvg over the trainable subtree only — this
+        # einsum over the cohort axis is the round's one all-reduce
+        new_trainable = jax.tree.map(
+            lambda l: _psum_if(jnp.einsum(
+                "c...,c->...", l.astype(jnp.float32), w), axis).astype(
+                    l.dtype), locals_)
+        mean_loss = _psum_if(jnp.sum(losses * w), axis)
+        return new_trainable, {"mean_local_loss": mean_loss,
+                               "cohort_losses": losses}
+
+    def _psum_if(x, ax):
+        return x if ax is None else jax.lax.psum(x, ax)
+
+    return round_fn
+
+
+def make_fl_round_step(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
+                       local_steps: Optional[int] = None):
+    """Legacy entry point (was federated.distributed.make_fl_round_step).
+
+    round_fn(trainable, frozen, batches, weights) with an all-true step
+    mask — every cohort runs all E steps of its (C, E, ...) stack.
+    """
+    program = make_round_program(adapter, optimizer, hp, t)
+
+    def round_fn(trainable, frozen, batches, weights):
+        C, E = jax.tree.leaves(batches)[0].shape[:2]
+        new_trainable, metrics = program(
+            trainable, frozen, batches, weights, jnp.ones((C, E), bool))
+        return new_trainable, {"mean_local_loss": metrics["mean_local_loss"]}
+
+    return round_fn
+
+
+def cohort_batches_specs(cfg, num_cohorts: int, local_steps: int,
+                         per_cohort_batch: int, seq: int):
+    """ShapeDtypeStruct tree for the (C, E, ...) batch stack (dry-run)."""
+    from repro.configs import label_specs, token_inputs
+
+    def stack(sds):
+        return jax.ShapeDtypeStruct(
+            (num_cohorts, local_steps, *sds.shape), sds.dtype)
+
+    inputs = jax.tree.map(stack, token_inputs(cfg, per_cohort_batch, seq))
+    labels = jax.tree.map(stack, label_specs(cfg, per_cohort_batch, seq))
+    return {"inputs": inputs, "labels": labels}
+
+
+# =========================================================================== #
+# runtimes
+# =========================================================================== #
+@dataclasses.dataclass
+class RoundOutcome:
+    """What the server needs back from one executed round."""
+    params: Any                  # full param tree with stage t merged back
+    trainable: Any               # aggregated trainable subtree (upload bytes)
+    mean_loss: Any               # |D_c|-weighted mean local loss (device ok)
+    cohort_losses: Any           # (C,) per-cohort mean local loss
+    num_batches: List[int]       # true local steps per cohort (sim time)
+    num_samples: List[int]       # true per-cohort sample counts
+
+
+class ClientRuntime:
+    """Base: owns the adapter/optimizer/hp triple and per-stage programs.
+
+    ``run_round`` is the server-facing entry (builds the round's data from
+    client batchers); ``run_stacked`` executes a pre-materialized
+    ``RoundStack`` — the seam the equivalence tests and the throughput
+    benchmark drive directly.
+    """
+
+    name = "base"
+
+    def __init__(self, adapter: Adapter, optimizer, hp: CurriculumHP):
+        self.adapter = adapter
+        self.optimizer = optimizer
+        self.hp = hp
+        self._programs: Dict[int, Any] = {}
+
+    # -- backend hook ------------------------------------------------------ #
+    def _run_stack(self, t: int, trainable, frozen, stack: RoundStack):
+        raise NotImplementedError
+
+    # -- shared driver ----------------------------------------------------- #
+    def run_stacked(self, params, t: int, stack: RoundStack):
+        """One round on a prepared stack -> (new_trainable, metrics)."""
+        if float(np.sum(stack.weights)) <= 0:
+            raise ValueError("round has zero total aggregation weight")
+        frozen, trainable = self.adapter.split_stage(params, t)
+        return self._run_stack(t, trainable, frozen, stack)
+
+    def run_round(self, params, t: int, batchers: Sequence[Batcher],
+                  cohorts: Sequence[int], local_epochs: int) -> RoundOutcome:
+        stack = stack_round(batchers, cohorts, local_epochs=local_epochs)
+        new_trainable, metrics = self.run_stacked(params, t, stack)
+        return RoundOutcome(
+            params=self.adapter.merge_stage(params, new_trainable, t),
+            trainable=new_trainable,
+            mean_loss=metrics["mean_local_loss"],
+            cohort_losses=metrics["cohort_losses"],
+            num_batches=list(stack.num_batches),
+            num_samples=[int(w) for w in stack.weights])
+
+
+class SequentialRuntime(ClientRuntime):
+    """Reference backend: clients one-by-one, one jitted step per batch.
+
+    Kept as the semantic baseline the array backends must match; per-step
+    losses stay on device (no host sync until the server reads the round's
+    aggregate).
+    """
+
+    name = "sequential"
+
+    def _step(self, t: int):
+        if t not in self._programs:
+            self._programs[t] = jit_stage_step(
+                self.adapter, self.optimizer, self.hp, t)
+        return self._programs[t]
+
+    def _run_stack(self, t, trainable, frozen, stack: RoundStack):
+        step = self._step(t)
+        results, losses = [], []
+        for c in range(stack.num_cohorts):
+            tr_c = trainable
+            opt_state = self.optimizer.init(tr_c)
+            cohort_losses = []
+            for e in range(stack.max_steps):
+                # honor arbitrary masks (e.g. mid-round dropout), not just
+                # the True-prefix padding stack_round emits
+                if not stack.step_mask[c, e]:
+                    continue
+                batch = jax.tree.map(lambda x: jnp.asarray(x[c, e]),
+                                     stack.batches)
+                opt_state, tr_c, metrics = step(opt_state, tr_c, frozen,
+                                                batch, trainable)
+                cohort_losses.append(metrics["loss"])
+            results.append(tr_c)
+            losses.append(jnp.stack(cohort_losses).mean() if cohort_losses
+                          else jnp.zeros(()))
+        new_trainable = agg.weighted_average(results, stack.weights)
+        cohort_losses = jnp.stack(losses)
+        w = jnp.asarray(stack.weights / stack.weights.sum(), jnp.float32)
+        return new_trainable, {"mean_local_loss": (cohort_losses * w).sum(),
+                               "cohort_losses": cohort_losses}
+
+    def run_round(self, params, t, batchers, cohorts, local_epochs):
+        """Current server semantics: iterate each client's own Batcher."""
+        frozen, trainable = self.adapter.split_stage(params, t)
+        step = self._step(t)
+        results, losses, num_batches, num_samples = [], [], [], []
+        for cid in cohorts:
+            res = run_local_training(step, self.optimizer, trainable, frozen,
+                                     batchers[cid], local_epochs,
+                                     global_ref=trainable)
+            results.append(res.trainable)
+            losses.append(res.mean_loss)
+            num_batches.append(res.num_batches)
+            num_samples.append(res.num_samples)
+        new_trainable = agg.weighted_average(results, num_samples)
+        cohort_losses = jnp.stack([jnp.asarray(l) for l in losses])
+        w = np.asarray(num_samples, np.float32)
+        w = jnp.asarray(w / w.sum())
+        return RoundOutcome(
+            params=self.adapter.merge_stage(params, new_trainable, t),
+            trainable=new_trainable,
+            mean_loss=(cohort_losses * w).sum(),
+            cohort_losses=cohort_losses,
+            num_batches=num_batches,
+            num_samples=num_samples)
+
+
+class VectorizedRuntime(ClientRuntime):
+    """One jitted program per stage: vmapped scan + fused Eq. 1 einsum.
+
+    The (C, E, ...) batch stack is donated to the program — it is rebuilt
+    from host data every round, so XLA may reuse its buffers in place.
+    """
+
+    name = "vectorized"
+
+    def _program(self, t: int):
+        if t not in self._programs:
+            from repro.core.progressive import donation_supported
+            self._programs[t] = jax.jit(
+                make_round_program(self.adapter, self.optimizer, self.hp, t),
+                donate_argnums=(2,) if donation_supported() else ())
+        return self._programs[t]
+
+    def _device_stack(self, stack: RoundStack):
+        return (jax.tree.map(jnp.asarray, stack.batches),
+                jnp.asarray(stack.weights),
+                jnp.asarray(stack.step_mask))
+
+    def _run_stack(self, t, trainable, frozen, stack: RoundStack):
+        batches, weights, mask = self._device_stack(stack)
+        return self._program(t)(trainable, frozen, batches, weights, mask)
+
+
+class ShardedRuntime(VectorizedRuntime):
+    """The vectorized program under ``shard_map`` over a launch mesh.
+
+    The cohort axis shards over ``axis`` (default the mesh's "data" axis);
+    params stay replicated and the Eq. 1 aggregation lowers to one psum —
+    FL's single per-round collective.  Cohort counts that don't divide the
+    axis size are padded with zero-weight, fully-masked cohorts.
+    """
+
+    name = "sharded"
+
+    def __init__(self, adapter, optimizer, hp, *, mesh=None,
+                 axis: str = "data"):
+        super().__init__(adapter, optimizer, hp)
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(1)
+        self.mesh = mesh
+        self.axis = axis
+
+    @property
+    def _shards(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def _program(self, t: int):
+        if t not in self._programs:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            program = make_round_program(self.adapter, self.optimizer,
+                                         self.hp, t, axis=self.axis)
+            sharded = shard_map(
+                program, mesh=self.mesh,
+                in_specs=(P(), P(), P(self.axis), P(self.axis),
+                          P(self.axis)),
+                out_specs=(P(), {"mean_local_loss": P(),
+                                 "cohort_losses": P(self.axis)}),
+                check_rep=False)
+            from repro.core.progressive import donation_supported
+            self._programs[t] = jax.jit(
+                sharded, donate_argnums=(2,) if donation_supported() else ())
+        return self._programs[t]
+
+    def _device_stack(self, stack: RoundStack):
+        batches, weights, mask = super()._device_stack(stack)
+        C = weights.shape[0]
+        pad = (-C) % self._shards
+        if pad:
+            batches = jax.tree.map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)]), batches)
+            weights = jnp.concatenate([weights, jnp.zeros(pad,
+                                                          weights.dtype)])
+            mask = jnp.concatenate(
+                [mask, jnp.zeros((pad, mask.shape[1]), bool)])
+        return batches, weights, mask
+
+    def _run_stack(self, t, trainable, frozen, stack: RoundStack):
+        new_trainable, metrics = super()._run_stack(t, trainable, frozen,
+                                                    stack)
+        C = stack.num_cohorts
+        metrics = dict(metrics,
+                       cohort_losses=metrics["cohort_losses"][:C])
+        return new_trainable, metrics
+
+
+RUNTIMES = {"sequential": SequentialRuntime,
+            "vectorized": VectorizedRuntime,
+            "sharded": ShardedRuntime}
+
+
+def make_runtime(spec: Union[str, ClientRuntime], adapter: Adapter,
+                 optimizer, hp: CurriculumHP, **kwargs) -> ClientRuntime:
+    """Resolve a runtime name ("sequential" | "vectorized" | "sharded") or
+    pass an already-constructed ClientRuntime through unchanged."""
+    if isinstance(spec, ClientRuntime):
+        return spec
+    try:
+        cls = RUNTIMES[spec]
+    except KeyError:
+        raise ValueError(f"unknown runtime {spec!r}; "
+                         f"choose from {sorted(RUNTIMES)}") from None
+    return cls(adapter, optimizer, hp, **kwargs)

@@ -7,24 +7,33 @@ Implements the full workflow of paper Fig. 1 + Alg. 1:
   3. Model Aggregation   — weighted FedAvg over the trainable subtree.
   4. Progress Evaluation — validation metric feeds the plateau schedule.
   5. Model Growing       — next stage (round-robin growth by default).
+
+Steps 2-3 are delegated to a pluggable ``ClientRuntime`` (federated.runtime):
+``"sequential"`` loops clients in Python (reference), ``"vectorized"`` runs
+the whole cohort as one jitted program, ``"sharded"`` shards the cohort axis
+over a device mesh.  The server never touches step functions directly.
+
+Note: ``RoundResult.mean_loss`` is the |D_c|-weighted mean of client local
+losses (consistent with the Eq. 1 aggregation weights) on every backend —
+earlier revisions reported an unweighted client mean, so plateau-schedule
+trajectories driven by train loss can differ from pre-runtime history.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, List, Optional
+from typing import List, Optional, Union
 
 import jax
 import numpy as np
 
 from repro import optim
 from repro.core import (CurriculumHP, PlateauSchedule, RoundRobinSchedule,
-                        SequentialSchedule, make_stage_step)
+                        SequentialSchedule)
 from repro.core.memory import estimate_full_memory, estimate_stage_memory
 from repro.data.loader import Batcher
 from repro.federated import aggregation as agg
-from repro.federated.client import run_local_training
 from repro.federated.devices import sample_devices
+from repro.federated.runtime import ClientRuntime, make_runtime
 from repro.federated.selection import memory_feasible, random_select
 
 
@@ -49,6 +58,7 @@ class FLConfig:
     lambda2: float = 1.0
     alpha: float = 1.0                  # Dirichlet concentration
     seed: int = 0
+    runtime: str = "sequential"         # sequential | vectorized | sharded
 
 
 @dataclasses.dataclass
@@ -66,7 +76,8 @@ class RoundResult:
 class NeuLiteServer:
     def __init__(self, adapter, client_datasets: List, flc: FLConfig,
                  test_batcher: Optional[Batcher] = None,
-                 data_kind: str = "image"):
+                 data_kind: str = "image",
+                 runtime: Union[str, ClientRuntime, None] = None):
         self.adapter = adapter
         self.flc = flc
         self.rng = np.random.default_rng(flc.seed)
@@ -75,6 +86,9 @@ class NeuLiteServer:
         self.hp = CurriculumHP(lambda1_max=flc.lambda1,
                                lambda2_max=flc.lambda2, mu=flc.mu,
                                enabled=flc.curriculum)
+        self.runtime = make_runtime(runtime if runtime is not None
+                                    else flc.runtime,
+                                    adapter, self.optimizer, self.hp)
         self.test_batcher = test_batcher
         self.batchers = [Batcher(ds, flc.batch_size, seed=flc.seed + i,
                                  kind=data_kind)
@@ -91,7 +105,6 @@ class NeuLiteServer:
         full_mem = estimate_full_memory(adapter, flc.batch_size,
                                         seq=self._seq_len())
         self.devices = sample_devices(flc.seed, flc.n_devices, full_mem.total)
-        self._step_cache: Dict[int, Any] = {}
         self.history: List[RoundResult] = []
 
     # ------------------------------------------------------------------ #
@@ -100,12 +113,6 @@ class NeuLiteServer:
         ds = self.batchers[0].ds if self.batchers else None
         toks = getattr(ds, "tokens", None)
         return 0 if toks is None else toks.shape[1] - 1
-
-    def _stage_step(self, t: int):
-        if t not in self._step_cache:
-            self._step_cache[t] = jax.jit(make_stage_step(
-                self.adapter, self.optimizer, self.hp, t))
-        return self._step_cache[t]
 
     def stage_mem_requirement(self, t: int) -> int:
         return estimate_stage_memory(self.adapter, t, self.flc.batch_size,
@@ -119,28 +126,17 @@ class NeuLiteServer:
         feasible = memory_feasible(self.devices, req)
         selected = random_select(self.rng, feasible, flc.clients_per_round)
 
-        frozen, g_trainable = self.adapter.split_stage(self.params, t)
-        step_fn = self._stage_step(t)
-        results, weights = [], []
-        sim_times = []
-        dev_map = {d.device_id: d for d in self.devices}
-        for cid in selected:
-            res = run_local_training(
-                step_fn, self.optimizer, g_trainable, frozen,
-                self.batchers[cid], flc.local_epochs, global_ref=g_trainable)
-            results.append(res)
-            weights.append(res.num_samples)
-            sim_times.append(res.num_batches / dev_map[cid].speed)
-
-        if results:
-            new_trainable = agg.weighted_average(
-                [res.trainable for res in results], weights)
-            self.params = self.adapter.merge_stage(self.params,
-                                                   new_trainable, t)
-            upload = agg.tree_bytes(new_trainable) * len(results)
-            mean_loss = float(np.mean([res.mean_loss for res in results]))
+        if selected:
+            out = self.runtime.run_round(self.params, t, self.batchers,
+                                         selected, flc.local_epochs)
+            self.params = out.params
+            upload = agg.tree_bytes(out.trainable) * len(selected)
+            mean_loss = float(out.mean_loss)     # the round's one host sync
+            dev_map = {d.device_id: d for d in self.devices}
+            sim_times = [nb / dev_map[cid].speed
+                         for cid, nb in zip(selected, out.num_batches)]
         else:
-            upload, mean_loss = 0, float("nan")
+            upload, mean_loss, sim_times = 0, float("nan"), []
 
         acc = None
         if self.test_batcher is not None:
@@ -168,21 +164,24 @@ class NeuLiteServer:
 
     # ------------------------------------------------------------------ #
     def evaluate(self, max_batches: int = 8) -> float:
+        """Accuracy over valid positions only.
+
+        Works for both sequence-level (B,) and token-level (B, S) labels:
+        a ``batch["mask"]`` (or negative labels) marks padding positions
+        that are excluded from both numerator and denominator.
+        """
         correct = total = 0
         fwd = jax.jit(self.adapter.forward_eval)
         for i, batch in enumerate(self.test_batcher.epoch()):
             if i >= max_batches:
                 break
             logits = fwd(self.params, batch["inputs"])
-            if logits.ndim == 2:
-                pred = np.asarray(logits.argmax(-1))
-                correct += int((pred == batch["labels"]).sum())
-                total += len(pred)
-            else:
-                pred = np.asarray(logits.argmax(-1))
-                labels = batch["labels"]
-                correct += int((pred == labels).sum())
-                total += int(np.prod(labels.shape))
+            pred = np.asarray(logits.argmax(-1))
+            labels = np.asarray(batch["labels"])
+            mask = batch.get("mask")
+            mask = (labels >= 0) if mask is None else np.asarray(mask, bool)
+            correct += int(((pred == labels) & mask).sum())
+            total += int(mask.sum())
         return correct / max(total, 1)
 
     @property

@@ -110,7 +110,8 @@ def build_neulite_train(cfg: ModelConfig, shape_name: str, mesh,
     shape = SHAPES[shape_name]
     cfg = align_moe_dispatch(resolve_config(cfg, shape), mesh)
     adapter = make_transformer_adapter(cfg, num_stages=num_stages)
-    t = num_stages // 2 if stage is None else stage
+    # the plan may clamp num_stages to the period count (small configs)
+    t = adapter.plan.num_stages // 2 if stage is None else stage
     optimizer = make_optimizer(optimizer_name)
     hp = CurriculumHP(enabled=curriculum)
     step = make_stage_step(adapter, optimizer, hp, t)
@@ -191,12 +192,13 @@ def build_fl_round(cfg: ModelConfig, shape_name: str, mesh,
     """Cohorts = batch shards; E local steps with no cross-cohort comms;
     weighted FedAvg of the trainable subtree as the round's collective."""
     from jax.sharding import NamedSharding
-    from repro.federated.distributed import (cohort_batches_specs,
-                                             make_fl_round_step)
+    from repro.federated.runtime import (cohort_batches_specs,
+                                         make_fl_round_step)
     shape = SHAPES[shape_name]
     cfg = align_moe_dispatch(resolve_config(cfg, shape), mesh)
     adapter = make_transformer_adapter(cfg, num_stages=num_stages)
-    t = num_stages // 2 if stage is None else stage
+    # the plan may clamp num_stages to the period count (small configs)
+    t = adapter.plan.num_stages // 2 if stage is None else stage
     optimizer = make_optimizer(optimizer_name)
     hp = CurriculumHP()
     round_fn = make_fl_round_step(adapter, optimizer, hp, t, local_steps)

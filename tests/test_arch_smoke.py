@@ -63,12 +63,20 @@ def test_train_step(arch_setup):
     gnorm = sum(jnp.sum(jnp.abs(g.astype(jnp.float32)))
                 for g in jax.tree.leaves(grads))
     assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
-    # a small SGD step decreases the loss on the same batch (recurrent
-    # stacks are step-size sensitive; use a conservative lr)
-    lr = 0.02
-    p2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
-    l1 = loss_fn(p2)
-    assert float(l1) < float(l0) + 1e-3
+    # the gradient is a descent direction: some small SGD step strictly
+    # decreases the loss on the same batch.  The safe step size is
+    # arch-dependent (recurrent/MoE stacks overshoot at 2e-2), so backtrack
+    # like a line search instead of hard-coding one lr for every
+    # architecture.  Every arch descends by >=2e-2 at its best lr, so the
+    # 1e-3 margin keeps the check sensitive to a sign-flipped gradient.
+    l1 = None
+    for lr in (0.02, 0.005, 0.001, 1e-4):
+        p2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params,
+                          grads)
+        l1 = loss_fn(p2)
+        if float(l1) < float(l0) - 1e-3:
+            break
+    assert float(l1) < float(l0) - 1e-3
 
 
 def test_neulite_stage_step(arch_setup):

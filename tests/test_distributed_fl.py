@@ -1,4 +1,4 @@
-"""The pjit-able FL round (federated/distributed.py) must be semantically
+"""The pjit-able FL round (federated/runtime.py) must be semantically
 identical to sequential per-client training + weighted_average."""
 import jax
 import jax.numpy as jnp
@@ -7,7 +7,7 @@ import numpy as np
 from repro.core import CurriculumHP, make_stage_step, \
     make_transformer_adapter
 from repro.federated import aggregation as agg
-from repro.federated.distributed import make_fl_round_step
+from repro.federated.runtime import make_fl_round_step
 from repro.models.config import ModelConfig
 from repro.optim import sgd
 
