@@ -9,6 +9,12 @@ cohort batch stack (data pipeline excluded), for the paper's CNN
 (ResNet18) and transformer (ViT) at CPU-benchmark scale.
 
   PYTHONPATH=src python -m benchmarks.fl_round_throughput [--cohorts 16]
+
+``--runtime async`` instead reports the buffered-async (FedBuff) round on
+a virtual clock: cohorts deliver deltas at ``steps / speed`` under a
+heterogeneous device-tier speed mix, the server flushes every K arrivals,
+and the simulated round wall-clock (last flush) is compared against the
+synchronous barrier (slowest straggler).
 """
 from __future__ import annotations
 
@@ -69,6 +75,37 @@ def bench(kind: str, num_cohorts: int = 16, batch_size: int = 4,
     return out
 
 
+def bench_async(kind: str, num_cohorts: int = 16, batch_size: int = 4,
+                local_steps: int = 2, stage: int = 1,
+                buffer_size: int = 0, seed: int = 0):
+    """Simulated-time speedup of buffered-async rounds vs the synchronous
+    barrier; returns a dict of the virtual-clock numbers."""
+    import numpy as np
+    from repro.federated.devices import sample_devices
+    from repro.federated.runtime import AsyncBufferedRuntime
+
+    if buffer_size <= 0:
+        buffer_size = max(1, (3 * num_cohorts) // 4)
+    adapter, params, opt, hp, stack = _setup(kind, num_cohorts, batch_size,
+                                             local_steps)
+    # heterogeneous fleet: device-tier speed mix (Jetson-class .. phones)
+    speeds = np.asarray([d.speed for d in
+                         sample_devices(seed, num_cohorts, 1)])
+    sim_times = np.asarray(stack.num_batches, float) / speeds
+    sync_time = float(sim_times.max())
+
+    runtime = AsyncBufferedRuntime(adapter, opt, hp,
+                                   buffer_size=buffer_size)
+    _, metrics = runtime.run_stacked(params, stage, stack,
+                                     sim_times=sim_times)
+    async_time = metrics["sim_round_time"]
+    return {"buffer_size": buffer_size, "sync_time": sync_time,
+            "async_time": async_time,
+            "speedup": sync_time / max(async_time, 1e-12),
+            "n_pending": metrics["n_pending"],
+            "n_flushes": int(metrics["staleness"].max()) + 1}
+
+
 def quick():
     for kind in ("cnn", "transformer"):
         rps = bench(kind, num_cohorts=16, batch_size=4, local_steps=2)
@@ -85,7 +122,21 @@ def main():
     ap.add_argument("--steps", type=int, default=2)
     ap.add_argument("--stage", type=int, default=1)
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--runtime", choices=["all", "async"], default="all",
+                    help="'async': simulated-time FedBuff speedup report")
+    ap.add_argument("--buffer", type=int, default=0,
+                    help="async buffer size K (0 = 3/4 of the cohort)")
     args = ap.parse_args()
+    if args.runtime == "async":
+        print(f"{'model':12s} {'K':>4s} {'flushes':>7s} {'pending':>7s} "
+              f"{'t_sync':>8s} {'t_async':>8s} {'speedup':>8s}")
+        for kind in ("cnn", "transformer"):
+            r = bench_async(kind, args.cohorts, args.batch, args.steps,
+                            args.stage, args.buffer)
+            print(f"{kind:12s} {r['buffer_size']:4d} {r['n_flushes']:7d} "
+                  f"{r['n_pending']:7d} {r['sync_time']:8.2f} "
+                  f"{r['async_time']:8.2f} {r['speedup']:7.2f}x")
+        return
     print(f"{'model':12s} {'backend':12s} {'rounds/s':>9s} {'speedup':>8s}")
     for kind in ("cnn", "transformer"):
         rps = bench(kind, args.cohorts, args.batch, args.steps, args.stage,

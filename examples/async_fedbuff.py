@@ -1,0 +1,50 @@
+"""Buffered-async FL (FedBuff-style) with client dropout at example scale.
+
+A heterogeneous 12-device fleet trains the paper's ResNet18 progressively.
+The synchronous server waits for the slowest straggler every round; the
+async server flushes its buffer every K deliveries with staleness-discounted
+aggregation and never waits for the tail — same data, same model, less
+simulated wall-clock per round.  A constant dropout schedule additionally
+crashes ~15% of the selected clients mid-round; their partial updates are
+aggregated with completed-step weights.
+
+  PYTHONPATH=src python examples/async_fedbuff.py
+"""
+import numpy as np
+
+from repro.core import make_adapter
+from repro.data import Batcher, dirichlet_partition, make_image_dataset
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.models.cnn import CNNConfig
+
+ROUNDS = 6
+ds = make_image_dataset(0, 1200, num_classes=10, image_size=8)
+test = make_image_dataset(1, 256, num_classes=10, image_size=8)
+parts = dirichlet_partition(0, ds.labels, 12, alpha=1.0)
+clients = [ds.subset(p) for p in parts]
+ccfg = CNNConfig(name="resnet18", arch="resnet18", num_classes=10,
+                 image_size=8, width_mult=0.25)
+base = dict(n_devices=12, clients_per_round=6, local_epochs=1,
+            batch_size=16, num_stages=2, seed=0)
+
+print("== synchronous (vectorized) ==")
+flc = FLConfig(**base, runtime="vectorized")
+srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients, flc,
+                    test_batcher=Batcher(test, 128, kind="image"))
+hist = srv.run(ROUNDS, log_every=2)
+sync_time = sum(h.sim_time for h in hist)
+
+print("\n== async (FedBuff: K=4, polynomial staleness, 15% dropout) ==")
+flc = FLConfig(**base, runtime="async", buffer_size=4,
+               staleness_schedule="polynomial", staleness_alpha=0.5,
+               dropout_schedule="constant", dropout_rate=0.15)
+srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients, flc,
+                    test_batcher=Batcher(test, 128, kind="image"))
+hist = srv.run(ROUNDS, log_every=2)
+async_time = sum(h.sim_time for h in hist)
+
+print(f"\nsimulated training time: sync {sync_time:.1f}s  "
+      f"async {async_time:.1f}s  "
+      f"speedup {sync_time / max(async_time, 1e-9):.2f}x")
+print(f"async final acc {hist[-1].test_acc:.3f} "
+      f"(lost rounds: {sum(1 for h in hist if np.isnan(h.mean_loss))})")

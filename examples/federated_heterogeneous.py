@@ -25,7 +25,8 @@ ccfg = CNNConfig(name="resnet18", arch="resnet18", image_size=16,
                  width_mult=0.5)
 # runtime selects how the cohort executes: "sequential" (reference Python
 # loop — right for this CPU-scale CNN), "vectorized" (whole cohort as one
-# jitted program), or "sharded" (cohort axis over a device mesh).
+# jitted program), "sharded" (cohort axis over a device mesh), or "async"
+# (FedBuff-style buffered rounds — see examples/async_fedbuff.py).
 flc = FLConfig(n_devices=30, clients_per_round=5, local_epochs=1,
                batch_size=32, num_stages=4, seed=0, rounds_per_stage=2,
                runtime="sequential")

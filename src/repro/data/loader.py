@@ -144,3 +144,42 @@ def stack_round(batchers: Sequence[Batcher],
         step_mask=np.asarray(mask_rows, bool),
         weights=np.asarray([b.num_samples for b in picked], np.float32),
         num_batches=[int(t) for t in targets])
+
+
+def truncate_step_mask(stack: RoundStack,
+                       completed_steps: Sequence[Optional[int]]
+                       ) -> RoundStack:
+    """Mid-round dropout / fault injection on a prepared ``RoundStack``.
+
+    ``completed_steps[i]`` is the number of true local steps cohort i
+    finished before dropping out (``None`` = no fault).  The cohort's mask
+    row is truncated to its first ``completed_steps[i]`` true steps — the
+    remaining steps become exact no-ops on every backend — and its Eq. 1
+    weight is scaled by the completed fraction (completed-step-weighted
+    aggregation).  A cohort that crashes before step 0 keeps zero weight;
+    weights never increase, so dropout can only *shrink* a cohort's share.
+
+    Returns a new ``RoundStack`` sharing the (immutable here) batch arrays.
+    """
+    if len(completed_steps) != stack.num_cohorts:
+        raise ValueError(
+            f"completed_steps has {len(completed_steps)} entries for "
+            f"{stack.num_cohorts} cohorts")
+    mask = stack.step_mask.copy()
+    weights = np.asarray(stack.weights, np.float32).copy()
+    num_batches = list(stack.num_batches)
+    for i, done in enumerate(completed_steps):
+        if done is None:
+            continue
+        done = int(done)
+        if done < 0:
+            raise ValueError(f"negative completed_steps[{i}] = {done}")
+        target = num_batches[i]
+        if done >= target:
+            continue                      # fault after finishing: no-op
+        true_pos = np.flatnonzero(mask[i])
+        mask[i, true_pos[done:]] = False
+        weights[i] *= done / target
+        num_batches[i] = done
+    return RoundStack(batches=stack.batches, step_mask=mask,
+                      weights=weights, num_batches=num_batches)

@@ -1,14 +1,19 @@
-from repro.federated.aggregation import weighted_average
+from repro.federated.aggregation import (staleness_discount,
+                                         stacked_weighted_average,
+                                         weighted_average)
 from repro.federated.devices import DeviceProfile, sample_devices
-from repro.federated.runtime import (ClientRuntime, RoundOutcome,
-                                     SequentialRuntime, ShardedRuntime,
-                                     VectorizedRuntime, make_runtime)
+from repro.federated.runtime import (AsyncBufferedRuntime, ClientRuntime,
+                                     RoundOutcome, SequentialRuntime,
+                                     ShardedRuntime, VectorizedRuntime,
+                                     make_runtime, plan_flushes)
 from repro.federated.selection import (memory_feasible, oort_select,
                                        random_select, tifl_select)
 from repro.federated.server import FLConfig, NeuLiteServer, RoundResult
 
-__all__ = ["weighted_average", "DeviceProfile", "sample_devices",
+__all__ = ["weighted_average", "stacked_weighted_average",
+           "staleness_discount", "DeviceProfile", "sample_devices",
            "memory_feasible", "random_select", "tifl_select", "oort_select",
            "FLConfig", "NeuLiteServer", "RoundResult", "ClientRuntime",
            "RoundOutcome", "SequentialRuntime", "VectorizedRuntime",
-           "ShardedRuntime", "make_runtime"]
+           "ShardedRuntime", "AsyncBufferedRuntime", "plan_flushes",
+           "make_runtime"]

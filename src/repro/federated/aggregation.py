@@ -3,32 +3,75 @@
 Weighted FedAvg over arbitrary pytrees.  NeuLite uploads only
 ``[L_{t-1_b}, θ_t, θ_Op]`` — callers pass the *trainable subtree*, so the
 aggregation (and its communication volume) covers the active block only.
+
+Every entry point funnels into one stacked einsum over the client axis
+(``stacked_weighted_average``); the buffered-async runtime folds FedBuff
+staleness discounts (``staleness_discount``) into the same contraction.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+STALENESS_SCHEDULES = ("constant", "polynomial")
 
-def weighted_average(trees: Sequence, weights: Sequence[float]):
-    """One stacked einsum per leaf (single fused contraction over the
-    client axis) instead of leaf-by-leaf Python accumulation."""
+
+def staleness_discount(staleness, schedule: str = "polynomial",
+                       alpha: float = 0.5) -> np.ndarray:
+    """FedBuff staleness discount d(s) per delta.
+
+    ``constant``  : d(s) = 1 (no discount — pure buffered FedAvg)
+    ``polynomial``: d(s) = (1 + s)^-alpha (the FedBuff paper's default)
+
+    ``staleness`` counts server updates that happened between a client
+    pulling params and its delta being aggregated; s = 0 means fresh.
+    """
+    s = np.asarray(staleness, np.float64)
+    if s.size and s.min() < 0:
+        raise ValueError(f"staleness must be >= 0; got min {s.min()}")
+    if schedule == "constant":
+        return np.ones_like(s)
+    if schedule == "polynomial":
+        return (1.0 + s) ** (-float(alpha))
+    raise ValueError(f"unknown staleness schedule {schedule!r}; "
+                     f"choose from {STALENESS_SCHEDULES}")
+
+
+def stacked_weighted_average(tree, weights: Sequence[float],
+                             discounts: Optional[Sequence[float]] = None):
+    """Eq. 1 as one einsum per leaf over a pre-stacked client axis.
+
+    ``tree`` leaves carry a leading (C,) client axis.  ``weights`` (true
+    sample counts, possibly completed-step-scaled) are normalized to sum to
+    one; optional per-client ``discounts`` (e.g. staleness) multiply the
+    normalized weights *without* renormalization — a stale buffer shrinks
+    the update instead of silently re-inflating fresh clients.
+    """
     w = np.asarray(weights, np.float64)
     total = w.sum()
     if not np.isfinite(total) or total <= 0:
         raise ValueError(
-            f"weighted_average needs a positive finite weight sum; "
+            f"aggregation needs a positive finite weight sum; "
             f"got sum({np.asarray(weights).tolist()}) = {total}")
-    wj = jnp.asarray(w / total, jnp.float32)
+    w = w / total
+    if discounts is not None:
+        w = w * np.asarray(discounts, np.float64)
+    wj = jnp.asarray(w, jnp.float32)
 
-    def avg(*leaves):
-        stack = jnp.stack([leaf.astype(jnp.float32) for leaf in leaves])
-        return jnp.einsum("c...,c->...", stack, wj).astype(leaves[0].dtype)
+    def avg(leaf):
+        return jnp.einsum("c...,c->...", leaf.astype(jnp.float32),
+                          wj).astype(leaf.dtype)
 
-    return jax.tree.map(avg, *trees)
+    return jax.tree.map(avg, tree)
+
+
+def weighted_average(trees: Sequence, weights: Sequence[float]):
+    """FedAvg over a list of per-client trees (stacks, then one einsum)."""
+    return stacked_weighted_average(
+        jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees), weights)
 
 
 def tree_bytes(tree) -> int:

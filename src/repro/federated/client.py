@@ -7,11 +7,47 @@ host at round end (``float(result.mean_loss)``) — not one sync per batch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, List, Optional, Sequence
 
 import jax.numpy as jnp
 
 from repro.data.loader import Batcher
+
+DROPOUT_SCHEDULES = ("none", "constant", "ramp")
+
+
+def dropout_prob(schedule: str, rate: float, round_idx: int) -> float:
+    """Per-round client dropout probability.
+
+    ``none``     : dropout disabled
+    ``constant`` : every round drops clients with probability ``rate``
+    ``ramp``     : probability ramps linearly from rate/10 to ``rate`` over
+                   the first 10 rounds (fleet degrades as the run ages)
+    """
+    if schedule == "none" or rate <= 0:
+        return 0.0
+    if schedule == "constant":
+        return float(rate)
+    if schedule == "ramp":
+        return float(rate) * min(1.0, (round_idx + 1) / 10.0)
+    raise ValueError(f"unknown dropout schedule {schedule!r}; "
+                     f"choose from {DROPOUT_SCHEDULES}")
+
+
+def sample_fault_steps(rng, targets: Sequence[int],
+                       prob: float) -> List[Optional[int]]:
+    """Draw mid-round faults: with probability ``prob`` client i crashes
+    uniformly at one of its ``targets[i]`` local steps (0 = before any step
+    completes, so its update carries zero aggregation weight).  Returns a
+    per-client list of completed-step counts; ``None`` marks survivors.
+    """
+    faults: List[Optional[int]] = []
+    for target in targets:
+        if prob > 0 and rng.random() < prob:
+            faults.append(int(rng.integers(0, max(int(target), 1))))
+        else:
+            faults.append(None)
+    return faults
 
 
 @dataclasses.dataclass

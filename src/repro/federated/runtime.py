@@ -5,15 +5,21 @@ steps on each selected client with **no cross-cohort communication**, then
 weighted-FedAvg (Eq. 1) the trainable subtree.  The three backends execute
 those identical semantics at different points on the throughput curve:
 
-  SequentialRuntime — reference Python loop; one jitted stage step per batch,
-                      clients simulated one-by-one (CPU testbeds, debugging).
-  VectorizedRuntime — ONE jitted program per stage: cohort-vmapped
-                      ``lax.scan`` local training fused with the Eq. 1
-                      aggregation einsum (the round's single collective).
-  ShardedRuntime    — the same program under ``shard_map`` over a launch
-                      mesh; the cohort axis shards across devices and the
-                      aggregation lowers to one ``psum`` — the all-reduce
-                      the roofline dry-run measures.
+  SequentialRuntime    — reference Python loop; one jitted stage step per
+                         batch, clients simulated one-by-one (CPU testbeds,
+                         debugging).
+  VectorizedRuntime    — ONE jitted program per stage: cohort-vmapped
+                         ``lax.scan`` local training fused with the Eq. 1
+                         aggregation einsum (the round's single collective).
+  ShardedRuntime       — the same program under ``shard_map`` over a launch
+                         mesh; the cohort axis shards across devices and the
+                         aggregation lowers to one ``psum`` — the all-reduce
+                         the roofline dry-run measures.
+  AsyncBufferedRuntime — FedBuff-style buffered aggregation on a virtual
+                         clock: clients deliver deltas at their own
+                         simulated pace, the server flushes every K arrivals
+                         with staleness-discounted Eq. 1 weights and never
+                         waits for stragglers (see the class docstring).
 
 All backends consume a ``RoundStack`` (``data.loader.stack_round``): a
 (C, E, ...) batch stack plus a (C, E) step mask.  The mask preserves the
@@ -33,7 +39,8 @@ import numpy as np
 
 from repro.core.curriculum import CurriculumHP
 from repro.core.progressive import Adapter, jit_stage_step, make_stage_loss
-from repro.data.loader import Batcher, RoundStack, stack_round
+from repro.data.loader import (Batcher, RoundStack, stack_round,
+                               truncate_step_mask)
 from repro.federated import aggregation as agg
 from repro.federated.client import run_local_training
 from repro.optim import apply_updates
@@ -42,19 +49,16 @@ from repro.optim import apply_updates
 # =========================================================================== #
 # the round program (one jit-able function per stage)
 # =========================================================================== #
-def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
-                       *, axis: Optional[str] = None):
-    """round_fn(trainable, frozen, batches, weights, step_mask)
-         -> (new_trainable, metrics)
+def make_local_program(adapter: Adapter, optimizer, hp: CurriculumHP,
+                       t: int):
+    """local_fn(trainable, frozen, batches, step_mask) -> (locals_, losses)
 
-    trainable : stage-t global trainable subtree (replicated across cohorts)
-    batches   : pytree with leading (C, E, ...) axes
-    weights   : (C,) Eq. 1 aggregation weights (true |D_c|)
-    step_mask : (C, E) bool — False steps are exact no-ops
-
-    With ``axis`` set the program is written for ``shard_map``: the cohort
-    axis is device-local and the aggregation / loss reductions become
-    ``psum`` collectives over that mesh axis.
+    The cohort-vmapped local-training half of a round, without the Eq. 1
+    aggregation: ``locals_`` stacks each cohort's post-training trainable
+    subtree on a leading (C,) axis, ``losses`` is the (C,) masked mean local
+    loss.  ``make_round_program`` fuses this with the aggregation einsum;
+    ``AsyncBufferedRuntime`` aggregates the resulting deltas itself, flush
+    by flush, on the host-side virtual clock.
     """
     loss_fn = make_stage_loss(adapter, hp, t)
 
@@ -79,10 +83,31 @@ def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
         n = jnp.maximum(cohort_mask.sum(), 1)
         return trainable, losses.sum() / n
 
+    def local_fn(trainable, frozen, batches, step_mask):
+        return jax.vmap(local_training, in_axes=(None, None, 0, 0))(
+            trainable, frozen, batches, step_mask)
+
+    return local_fn
+
+
+def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
+                       *, axis: Optional[str] = None):
+    """round_fn(trainable, frozen, batches, weights, step_mask)
+         -> (new_trainable, metrics)
+
+    trainable : stage-t global trainable subtree (replicated across cohorts)
+    batches   : pytree with leading (C, E, ...) axes
+    weights   : (C,) Eq. 1 aggregation weights (true |D_c|)
+    step_mask : (C, E) bool — False steps are exact no-ops
+
+    With ``axis`` set the program is written for ``shard_map``: the cohort
+    axis is device-local and the aggregation / loss reductions become
+    ``psum`` collectives over that mesh axis.
+    """
+    local_fn = make_local_program(adapter, optimizer, hp, t)
+
     def round_fn(trainable, frozen, batches, weights, step_mask):
-        locals_, losses = jax.vmap(
-            local_training, in_axes=(None, None, 0, 0))(
-                trainable, frozen, batches, step_mask)
+        locals_, losses = local_fn(trainable, frozen, batches, step_mask)
         total = weights.sum().astype(jnp.float32)
         if axis is not None:
             total = jax.lax.psum(total, axis)
@@ -146,7 +171,15 @@ class RoundOutcome:
     mean_loss: Any               # |D_c|-weighted mean local loss (device ok)
     cohort_losses: Any           # (C,) per-cohort mean local loss
     num_batches: List[int]       # true local steps per cohort (sim time)
-    num_samples: List[int]       # true per-cohort sample counts
+    num_samples: List[float]     # effective per-cohort sample counts
+    n_uploads: Optional[int] = None           # cohorts that actually
+                                              # delivered a counted update
+                                              # (drops step-0 crashes and
+                                              # async pending stragglers)
+    sim_times: Optional[List[float]] = None   # per-cohort simulated seconds
+    round_sim_time: Optional[float] = None    # simulated round wall-clock;
+                                              # async: last flush, not the
+                                              # slowest straggler
 
 
 class ClientRuntime:
@@ -178,17 +211,52 @@ class ClientRuntime:
         frozen, trainable = self.adapter.split_stage(params, t)
         return self._run_stack(t, trainable, frozen, stack)
 
-    def run_round(self, params, t: int, batchers: Sequence[Batcher],
-                  cohorts: Sequence[int], local_epochs: int) -> RoundOutcome:
-        stack = stack_round(batchers, cohorts, local_epochs=local_epochs)
+    def _round_from_stack(self, params, t: int, stack: RoundStack,
+                          cohorts: Sequence[int]):
+        """Execute one prepared stack -> (new_trainable, metrics, extras).
+
+        ``extras`` merges into the ``RoundOutcome`` (the async backend adds
+        its virtual-clock fields here).
+        """
         new_trainable, metrics = self.run_stacked(params, t, stack)
+        return new_trainable, metrics, {}
+
+    def run_round(self, params, t: int, batchers: Sequence[Batcher],
+                  cohorts: Sequence[int], local_epochs: int,
+                  faults: Optional[Sequence[Optional[int]]] = None
+                  ) -> RoundOutcome:
+        """One FL round.  ``faults`` (one entry per cohort, ``None`` = no
+        fault) injects mid-round dropout: cohort i's mask row is truncated
+        to its first ``faults[i]`` completed steps and its Eq. 1 weight
+        scales by the completed fraction (``loader.truncate_step_mask``).
+        A round where every cohort crashed before step 0 is a lost round:
+        params come back unchanged with a NaN loss.
+        """
+        stack = stack_round(batchers, cohorts, local_epochs=local_epochs)
+        if faults is not None:
+            stack = truncate_step_mask(stack, faults)
+        if float(np.sum(stack.weights)) <= 0:        # all cohorts dropped
+            _, trainable = self.adapter.split_stage(params, t)
+            return RoundOutcome(
+                params=params, trainable=trainable,
+                mean_loss=jnp.asarray(float("nan")),
+                cohort_losses=jnp.zeros(stack.num_cohorts),
+                num_batches=list(stack.num_batches),
+                num_samples=[float(w) for w in stack.weights],
+                n_uploads=0)
+        new_trainable, metrics, extras = self._round_from_stack(
+            params, t, stack, cohorts)
+        extras.setdefault(
+            "n_uploads", int(np.count_nonzero(
+                np.asarray(stack.weights) > 0)))
         return RoundOutcome(
             params=self.adapter.merge_stage(params, new_trainable, t),
             trainable=new_trainable,
             mean_loss=metrics["mean_local_loss"],
             cohort_losses=metrics["cohort_losses"],
             num_batches=list(stack.num_batches),
-            num_samples=[int(w) for w in stack.weights])
+            num_samples=[float(w) for w in stack.weights],
+            **extras)
 
 
 class SequentialRuntime(ClientRuntime):
@@ -233,8 +301,17 @@ class SequentialRuntime(ClientRuntime):
         return new_trainable, {"mean_local_loss": (cohort_losses * w).sum(),
                                "cohort_losses": cohort_losses}
 
-    def run_round(self, params, t, batchers, cohorts, local_epochs):
-        """Current server semantics: iterate each client's own Batcher."""
+    def run_round(self, params, t, batchers, cohorts, local_epochs,
+                  faults=None):
+        """Current server semantics: iterate each client's own Batcher.
+
+        With ``faults`` the round routes through the base stacked path —
+        the sequential ``_run_stack`` honors arbitrary (truncated) masks,
+        so dropout semantics stay identical across backends.
+        """
+        if faults is not None:
+            return ClientRuntime.run_round(self, params, t, batchers,
+                                           cohorts, local_epochs, faults)
         frozen, trainable = self.adapter.split_stage(params, t)
         step = self._step(t)
         results, losses, num_batches, num_samples = [], [], [], []
@@ -351,15 +428,194 @@ class ShardedRuntime(VectorizedRuntime):
         return new_trainable, metrics
 
 
+# =========================================================================== #
+# buffered-async (FedBuff-style) backend
+# =========================================================================== #
+@dataclasses.dataclass
+class FlushPlan:
+    """Virtual-clock schedule for one buffered-async round.
+
+    flushes    : cohort-index arrays, one per server flush, in arrival order
+    staleness  : (C,) int — server updates between a cohort pulling params
+                 and its delta aggregating (flush index); -1 = left pending
+    pending    : cohorts still in the buffer when the round closes (their
+                 deltas are dropped by the one-shot simulation)
+    round_time : simulated wall-clock of the last flush — the async round
+                 ends there, not at the slowest straggler
+    """
+    flushes: List[np.ndarray]
+    staleness: np.ndarray
+    pending: np.ndarray
+    round_time: float
+
+
+def plan_flushes(sim_times: Sequence[float], buffer_size: int) -> FlushPlan:
+    """Schedule FedBuff flushes on a virtual clock.
+
+    Cohorts arrive at ``sim_times``; the server flushes its buffer every
+    ``buffer_size`` arrivals (0 means "the whole cohort" — one synchronous
+    flush).  Arrivals after the last full buffer stay pending.  Ties break
+    by cohort index (stable sort) so the plan is deterministic.
+    """
+    t = np.asarray(sim_times, np.float64)
+    if t.ndim != 1 or t.size == 0:
+        raise ValueError(f"sim_times must be a non-empty 1-D sequence; "
+                         f"got shape {t.shape}")
+    if t.min() < 0:
+        raise ValueError(f"negative sim_time {t.min()}")
+    order = np.argsort(t, kind="stable")
+    C = t.size
+    K = C if buffer_size <= 0 else min(int(buffer_size), C)
+    n_full = C // K
+    flushes = [order[j * K:(j + 1) * K] for j in range(n_full)]
+    pending = order[n_full * K:]
+    staleness = np.full(C, -1, int)
+    for j, idx in enumerate(flushes):
+        staleness[idx] = j
+    return FlushPlan(flushes=flushes, staleness=staleness, pending=pending,
+                     round_time=float(t[flushes[-1][-1]]))
+
+
+class AsyncBufferedRuntime(ClientRuntime):
+    """FedBuff-style buffered-async rounds on a simulated clock.
+
+    All cohorts pull the round's params at virtual time 0 and deliver their
+    deltas at ``num_batches / speed``.  The server flushes every K arrivals
+    (``buffer_size``; 0 = cohort size): flush j applies the sample-weighted
+    buffer-average delta scaled by ``server_lr`` and the staleness discount
+    d(j) (``aggregation.staleness_discount`` — flush j's deltas were
+    computed j server versions ago).  Stragglers past the last full buffer
+    stay pending and are dropped — the round's simulated wall-clock is the
+    last *flush*, which is where the async speedup over the synchronous
+    barrier comes from.  Zero-weight cohorts (clients that crashed before
+    completing a single step) never deliver: they take no buffer slot and
+    consume no staleness level.
+
+    With K = cohort size and a constant (or any) discount at staleness 0,
+    the single flush reproduces the synchronous ``VectorizedRuntime`` round
+    (base + sum of weight-normalized deltas == the Eq. 1 average).
+    """
+
+    name = "async"
+
+    def __init__(self, adapter, optimizer, hp, *, buffer_size: int = 0,
+                 staleness_schedule: str = "polynomial",
+                 staleness_alpha: float = 0.5, server_lr: float = 1.0,
+                 client_speeds: Optional[Dict[int, float]] = None):
+        super().__init__(adapter, optimizer, hp)
+        agg.staleness_discount(np.zeros(1), staleness_schedule,
+                               staleness_alpha)    # validate eagerly
+        self.buffer_size = int(buffer_size)
+        self.staleness_schedule = staleness_schedule
+        self.staleness_alpha = float(staleness_alpha)
+        self.server_lr = float(server_lr)
+        self.client_speeds = client_speeds
+
+    def _program(self, t: int):
+        if t not in self._programs:
+            from repro.core.progressive import donation_supported
+            self._programs[t] = jax.jit(
+                make_local_program(self.adapter, self.optimizer, self.hp, t),
+                donate_argnums=(2,) if donation_supported() else ())
+        return self._programs[t]
+
+    def cohort_sim_times(self, stack: RoundStack,
+                         cohorts: Optional[Sequence[int]] = None
+                         ) -> np.ndarray:
+        """Simulated delivery times: completed steps / client speed."""
+        steps = np.asarray(stack.num_batches, np.float64)
+        if self.client_speeds is None or cohorts is None:
+            return steps
+        speeds = np.asarray([self.client_speeds.get(c, 1.0)
+                             for c in cohorts], np.float64)
+        return steps / np.maximum(speeds, 1e-9)
+
+    def run_stacked(self, params, t: int, stack: RoundStack, *,
+                    sim_times: Optional[Sequence[float]] = None):
+        """One buffered-async round on a prepared stack.
+
+        ``sim_times`` defaults to the per-cohort true step counts (unit
+        speed).  Metrics add the virtual-clock fields: ``staleness`` (per
+        cohort, -1 = pending), ``n_pending``, and ``sim_round_time``.
+        """
+        if float(np.sum(stack.weights)) <= 0:
+            raise ValueError("round has zero total aggregation weight")
+        frozen, trainable = self.adapter.split_stage(params, t)
+        return self._run_stack(t, trainable, frozen, stack,
+                               sim_times=sim_times)
+
+    def _run_stack(self, t, trainable, frozen, stack: RoundStack, *,
+                   sim_times=None):
+        batches = jax.tree.map(jnp.asarray, stack.batches)
+        mask = jnp.asarray(stack.step_mask)
+        locals_, losses = self._program(t)(trainable, frozen, batches, mask)
+
+        weights = np.asarray(stack.weights, np.float64)
+        times = np.asarray(self.cohort_sim_times(stack)
+                           if sim_times is None else sim_times, np.float64)
+        # cohorts that crashed before completing one step never deliver —
+        # they must not occupy buffer slots, displace real updates, or
+        # consume staleness levels (consistent with n_uploads accounting)
+        active = np.flatnonzero(weights > 0)
+        plan = plan_flushes(times[active], self.buffer_size)
+        # deltas against the round's base params, accumulated in f32; the
+        # per-flush contraction is the same Eq. 1 stacked einsum as the
+        # synchronous backends
+        deltas = jax.tree.map(
+            lambda loc, base: loc.astype(jnp.float32)
+            - base.astype(jnp.float32), locals_, trainable)
+        new_tr = jax.tree.map(lambda b: b.astype(jnp.float32), trainable)
+        staleness = np.full(len(weights), -1, int)
+        for j, f in enumerate(plan.flushes):
+            idx = active[f]
+            staleness[idx] = j
+            d = agg.staleness_discount(np.full(len(idx), j),
+                                       self.staleness_schedule,
+                                       self.staleness_alpha)
+            update = agg.stacked_weighted_average(
+                jax.tree.map(lambda d_: d_[idx], deltas), weights[idx],
+                discounts=d)
+            new_tr = jax.tree.map(
+                lambda b, u: b + self.server_lr * u.astype(jnp.float32),
+                new_tr, update)
+        new_trainable = jax.tree.map(lambda b, ref: b.astype(ref.dtype),
+                                     new_tr, trainable)
+
+        agg_idx = active[np.concatenate(plan.flushes)]
+        eff = weights[agg_idx] * agg.staleness_discount(
+            staleness[agg_idx], self.staleness_schedule,
+            self.staleness_alpha)
+        w = jnp.asarray(eff / eff.sum(), jnp.float32)
+        mean_loss = (losses[jnp.asarray(agg_idx)] * w).sum()
+        return new_trainable, {
+            "mean_local_loss": mean_loss,
+            "cohort_losses": losses,
+            "staleness": staleness,
+            "n_pending": int(plan.pending.size),
+            "n_uploads": int(agg_idx.size),
+            "sim_round_time": plan.round_time}
+
+    def _round_from_stack(self, params, t, stack, cohorts):
+        sim_times = self.cohort_sim_times(stack, cohorts)
+        new_trainable, metrics = self.run_stacked(params, t, stack,
+                                                  sim_times=sim_times)
+        return new_trainable, metrics, {
+            "sim_times": [float(x) for x in sim_times],
+            "round_sim_time": float(metrics["sim_round_time"]),
+            "n_uploads": metrics["n_uploads"]}
+
+
 RUNTIMES = {"sequential": SequentialRuntime,
             "vectorized": VectorizedRuntime,
-            "sharded": ShardedRuntime}
+            "sharded": ShardedRuntime,
+            "async": AsyncBufferedRuntime}
 
 
 def make_runtime(spec: Union[str, ClientRuntime], adapter: Adapter,
                  optimizer, hp: CurriculumHP, **kwargs) -> ClientRuntime:
-    """Resolve a runtime name ("sequential" | "vectorized" | "sharded") or
-    pass an already-constructed ClientRuntime through unchanged."""
+    """Resolve a runtime name ("sequential" | "vectorized" | "sharded" |
+    "async") or pass an already-constructed ClientRuntime through
+    unchanged."""
     if isinstance(spec, ClientRuntime):
         return spec
     try:

@@ -32,8 +32,10 @@ from repro.core import (CurriculumHP, PlateauSchedule, RoundRobinSchedule,
 from repro.core.memory import estimate_full_memory, estimate_stage_memory
 from repro.data.loader import Batcher
 from repro.federated import aggregation as agg
+from repro.federated.client import dropout_prob, sample_fault_steps
 from repro.federated.devices import sample_devices
-from repro.federated.runtime import ClientRuntime, make_runtime
+from repro.federated.runtime import (AsyncBufferedRuntime, ClientRuntime,
+                                     make_runtime)
 from repro.federated.selection import memory_feasible, random_select
 
 
@@ -59,6 +61,16 @@ class FLConfig:
     alpha: float = 1.0                  # Dirichlet concentration
     seed: int = 0
     runtime: str = "sequential"         # sequential | vectorized | sharded
+                                        # | async
+    # --- buffered-async (FedBuff) rounds; used when runtime == "async" ---
+    buffer_size: int = 0                # server flushes every K deliveries
+                                        # (0 = cohort size: synchronous)
+    staleness_schedule: str = "polynomial"   # constant | polynomial
+    staleness_alpha: float = 0.5        # d(s) = (1+s)^-alpha
+    server_lr: float = 1.0              # scale on each flushed buffer delta
+    # --- mid-round client dropout / fault injection (any runtime) ---
+    dropout_schedule: str = "none"      # none | constant | ramp
+    dropout_rate: float = 0.0           # per-client fault probability
 
 
 @dataclasses.dataclass
@@ -86,9 +98,15 @@ class NeuLiteServer:
         self.hp = CurriculumHP(lambda1_max=flc.lambda1,
                                lambda2_max=flc.lambda2, mu=flc.mu,
                                enabled=flc.curriculum)
-        self.runtime = make_runtime(runtime if runtime is not None
-                                    else flc.runtime,
-                                    adapter, self.optimizer, self.hp)
+        spec = runtime if runtime is not None else flc.runtime
+        rt_kwargs = {}
+        if spec == "async":
+            rt_kwargs = dict(buffer_size=flc.buffer_size,
+                             staleness_schedule=flc.staleness_schedule,
+                             staleness_alpha=flc.staleness_alpha,
+                             server_lr=flc.server_lr)
+        self.runtime = make_runtime(spec, adapter, self.optimizer, self.hp,
+                                    **rt_kwargs)
         self.test_batcher = test_batcher
         self.batchers = [Batcher(ds, flc.batch_size, seed=flc.seed + i,
                                  kind=data_kind)
@@ -105,6 +123,11 @@ class NeuLiteServer:
         full_mem = estimate_full_memory(adapter, flc.batch_size,
                                         seq=self._seq_len())
         self.devices = sample_devices(flc.seed, flc.n_devices, full_mem.total)
+        if (isinstance(self.runtime, AsyncBufferedRuntime)
+                and self.runtime.client_speeds is None):
+            # the fleet's heterogeneous speeds drive the virtual clock
+            self.runtime.client_speeds = {d.device_id: d.speed
+                                          for d in self.devices}
         self.history: List[RoundResult] = []
 
     # ------------------------------------------------------------------ #
@@ -127,14 +150,31 @@ class NeuLiteServer:
         selected = random_select(self.rng, feasible, flc.clients_per_round)
 
         if selected:
+            faults = None
+            prob = dropout_prob(flc.dropout_schedule, flc.dropout_rate, r)
+            if prob > 0:
+                targets = [flc.local_epochs
+                           * self.batchers[cid].steps_per_epoch
+                           for cid in selected]
+                faults = sample_fault_steps(self.rng, targets, prob)
             out = self.runtime.run_round(self.params, t, self.batchers,
-                                         selected, flc.local_epochs)
+                                         selected, flc.local_epochs,
+                                         faults=faults)
             self.params = out.params
-            upload = agg.tree_bytes(out.trainable) * len(selected)
+            # count only clients that actually delivered a counted update —
+            # step-0 crashes and async pending stragglers upload nothing
+            n_up = (out.n_uploads if out.n_uploads is not None
+                    else len(selected))
+            upload = agg.tree_bytes(out.trainable) * n_up
             mean_loss = float(out.mean_loss)     # the round's one host sync
-            dev_map = {d.device_id: d for d in self.devices}
-            sim_times = [nb / dev_map[cid].speed
-                         for cid, nb in zip(selected, out.num_batches)]
+            if out.round_sim_time is not None:
+                # async: the round closes at the last buffer flush, not at
+                # the slowest straggler
+                sim_times = [out.round_sim_time]
+            else:
+                dev_map = {d.device_id: d for d in self.devices}
+                sim_times = [nb / dev_map[cid].speed
+                             for cid, nb in zip(selected, out.num_batches)]
         else:
             upload, mean_loss, sim_times = 0, float("nan"), []
 
@@ -163,26 +203,71 @@ class NeuLiteServer:
         return self.history
 
     # ------------------------------------------------------------------ #
-    def evaluate(self, max_batches: int = 8) -> float:
+    def evaluate(self, max_batches: int = 8, *, batched: bool = True
+                 ) -> float:
         """Accuracy over valid positions only.
 
         Works for both sequence-level (B,) and token-level (B, S) labels:
         a ``batch["mask"]`` (or negative labels) marks padding positions
         that are excluded from both numerator and denominator.
+
+        ``batched=True`` (default) stacks the test batches on a leading
+        axis and runs ONE jitted program that maps the forward pass over
+        the stack (``lax.map`` — one batch's activation footprint, not
+        ``max_batches`` at once) and reduces the correct/valid counts on
+        device — a single host sync per evaluation instead of one logits
+        transfer per batch.  ``batched=False`` keeps the per-batch
+        reference loop; both paths count identically (regression-tested).
         """
-        correct = total = 0
-        fwd = jax.jit(self.adapter.forward_eval)
+        batches = []
         for i, batch in enumerate(self.test_batcher.epoch()):
             if i >= max_batches:
                 break
-            logits = fwd(self.params, batch["inputs"])
-            pred = np.asarray(logits.argmax(-1))
+            batches.append(batch)
+        if not batches:
+            return 0.0
+
+        def valid_mask(batch):
             labels = np.asarray(batch["labels"])
             mask = batch.get("mask")
-            mask = (labels >= 0) if mask is None else np.asarray(mask, bool)
-            correct += int(((pred == labels) & mask).sum())
-            total += int(mask.sum())
-        return correct / max(total, 1)
+            return ((labels >= 0) if mask is None
+                    else np.asarray(mask, bool))
+
+        if not batched:
+            correct = total = 0
+            fwd = jax.jit(self.adapter.forward_eval)
+            for batch in batches:
+                logits = fwd(self.params, batch["inputs"])
+                pred = np.asarray(logits.argmax(-1))
+                mask = valid_mask(batch)
+                correct += int(((pred == np.asarray(batch["labels"]))
+                                & mask).sum())
+                total += int(mask.sum())
+            return correct / max(total, 1)
+
+        inputs = jax.tree.map(lambda *xs: np.stack(xs),
+                              *[b["inputs"] for b in batches])
+        labels = np.stack([np.asarray(b["labels"]) for b in batches])
+        mask = np.stack([valid_mask(b) for b in batches])
+        correct, total = self._eval_program()(self.params, inputs, labels,
+                                              mask)
+        return int(correct) / max(int(total), 1)
+
+    def _eval_program(self):
+        if getattr(self, "_eval_fn", None) is None:
+            fwd = self.adapter.forward_eval
+
+            def counts(params, inputs, labels, mask):
+                def one(args):
+                    inp, lab, msk = args
+                    hit = (fwd(params, inp).argmax(-1) == lab) & msk
+                    return hit.sum(), msk.sum()
+
+                correct, valid = jax.lax.map(one, (inputs, labels, mask))
+                return correct.sum(), valid.sum()
+
+            self._eval_fn = jax.jit(counts)
+        return self._eval_fn
 
     @property
     def participation_rate(self) -> float:

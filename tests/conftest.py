@@ -45,6 +45,9 @@ except ModuleNotFoundError:
     _st.booleans = lambda: _Strategy(lambda r: bool(r.getrandbits(1)))
     _st.sampled_from = \
         lambda xs: _Strategy(lambda r, xs=list(xs): r.choice(xs))
+    _st.lists = lambda elem, min_size=0, max_size=6: _Strategy(
+        lambda r: [elem.draw(r)
+                   for _ in range(r.randint(min_size, max_size))])
 
     _hyp = types.ModuleType("hypothesis")
     _hyp.given = _given
@@ -71,3 +74,44 @@ def rng():
 @pytest.fixture()
 def np_rng():
     return np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------- #
+# shared FL fixtures (module-scoped: each test module gets its own adapter /
+# params / batchers, so per-module rng state stays independent)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def cnn_setup():
+    """Tiny ResNet18 adapter + params + 4 non-IID client batchers."""
+    from repro.core import make_adapter
+    from repro.data import Batcher, dirichlet_partition, make_image_dataset
+    from repro.models.cnn import CNNConfig
+
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    adapter = make_adapter(ccfg, 2)
+    params = adapter.init_params(jax.random.PRNGKey(0))
+    ds = make_image_dataset(0, 200, num_classes=4, image_size=8)
+    parts = dirichlet_partition(0, ds.labels, 4, alpha=1.0)
+    batchers = [Batcher(ds.subset(p), 16, seed=i, kind="image")
+                for i, p in enumerate(parts)]
+    return adapter, params, batchers
+
+
+@pytest.fixture(scope="module")
+def tx_setup():
+    """Tiny dense transformer adapter + params + 3 client batchers."""
+    from repro.core import make_transformer_adapter
+    from repro.data import Batcher, make_lm_dataset
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=4, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32")
+    adapter = make_transformer_adapter(cfg, 2)
+    params = adapter.init_params(jax.random.PRNGKey(0))
+    ds = make_lm_dataset(0, 96, 8, cfg.vocab_size)
+    idx = np.arange(len(ds))
+    batchers = [Batcher(ds.subset(idx[i::3]), 8, seed=i, kind="lm")
+                for i in range(3)]
+    return adapter, params, batchers

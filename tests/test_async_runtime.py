@@ -1,0 +1,302 @@
+"""AsyncBufferedRuntime: virtual-clock flush planning, staleness-weighted
+aggregation, dropout/fault injection, and server integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CurriculumHP, make_adapter
+from repro.data import dirichlet_partition, make_image_dataset
+from repro.data.loader import stack_round, truncate_step_mask
+from repro.federated import aggregation as agg
+from repro.federated.client import dropout_prob, sample_fault_steps
+from repro.federated.runtime import (AsyncBufferedRuntime,
+                                     VectorizedRuntime, plan_flushes)
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.models.cnn import CNNConfig
+from repro.optim import sgd
+
+
+# cnn_setup fixture is shared via tests/conftest.py
+
+
+def _assert_trees_close(a, b, **tol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **tol)
+
+
+# --------------------------------------------------------------------------- #
+# virtual-clock flush planning (pure host logic)
+# --------------------------------------------------------------------------- #
+def test_plan_flushes_groups_arrivals_and_leaves_stragglers():
+    plan = plan_flushes([4.0, 1.0, 2.5, 9.0, 3.0], buffer_size=2)
+    # arrival order: c1(1.0), c2(2.5), c4(3.0), c0(4.0); c3(9.0) pending
+    assert [f.tolist() for f in plan.flushes] == [[1, 2], [4, 0]]
+    assert plan.pending.tolist() == [3]
+    assert plan.staleness.tolist() == [1, 0, 0, -1, 1]
+    # the round closes at the LAST FLUSH, not at the slowest straggler
+    assert plan.round_time == 4.0
+
+
+def test_plan_flushes_zero_buffer_is_one_synchronous_flush():
+    plan = plan_flushes([3.0, 1.0, 2.0], buffer_size=0)
+    assert len(plan.flushes) == 1
+    assert plan.flushes[0].tolist() == [1, 2, 0]
+    assert plan.pending.size == 0
+    assert plan.round_time == 3.0            # waits for everyone
+
+
+def test_plan_flushes_ties_break_by_cohort_index():
+    plan = plan_flushes([1.0, 1.0, 1.0], buffer_size=2)
+    assert plan.flushes[0].tolist() == [0, 1]
+    assert plan.pending.tolist() == [2]
+
+
+def test_plan_flushes_validates_inputs():
+    with pytest.raises(ValueError):
+        plan_flushes([], 2)
+    with pytest.raises(ValueError):
+        plan_flushes([1.0, -0.5], 2)
+
+
+# --------------------------------------------------------------------------- #
+# staleness discounts folded into the Eq. 1 einsum
+# --------------------------------------------------------------------------- #
+def test_staleness_discount_schedules():
+    s = np.array([0, 1, 3])
+    np.testing.assert_allclose(
+        agg.staleness_discount(s, "constant"), [1.0, 1.0, 1.0])
+    np.testing.assert_allclose(
+        agg.staleness_discount(s, "polynomial", alpha=0.5),
+        (1.0 + s) ** -0.5)
+    with pytest.raises(ValueError):
+        agg.staleness_discount(s, "exponential")
+    with pytest.raises(ValueError):
+        agg.staleness_discount([-1.0], "constant")
+
+
+def test_stacked_weighted_average_discounts_shrink_not_renormalize():
+    tree = {"w": jnp.asarray([[2.0], [4.0]])}
+    full = agg.stacked_weighted_average(tree, [1.0, 1.0])
+    half = agg.stacked_weighted_average(tree, [1.0, 1.0],
+                                        discounts=[0.5, 0.5])
+    np.testing.assert_allclose(np.asarray(full["w"]), [3.0])
+    # a uniformly stale buffer halves the update instead of cancelling out
+    np.testing.assert_allclose(np.asarray(half["w"]), [1.5])
+
+
+# --------------------------------------------------------------------------- #
+# async round semantics
+# --------------------------------------------------------------------------- #
+def test_async_full_buffer_matches_vectorized(cnn_setup):
+    """K = cohort size + staleness 0 => the synchronous round exactly."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack = stack_round(batchers, range(len(batchers)), local_epochs=1)
+    vec = VectorizedRuntime(adapter, opt, hp)
+    asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=0,
+                               staleness_schedule="polynomial")
+    tr_v, m_v = vec.run_stacked(params, 0, stack)
+    tr_a, m_a = asy.run_stacked(params, 0, stack)
+    _assert_trees_close(tr_v, tr_a, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(m_v["mean_local_loss"]),
+                               float(m_a["mean_local_loss"]), rtol=1e-4)
+    assert m_a["n_pending"] == 0
+    assert (m_a["staleness"] == 0).all()
+
+
+def test_async_straggler_never_delays_or_moves_the_round(cnn_setup):
+    """With K < C the slowest cohort stays pending: the round closes at the
+    last flush and the pending delta must not influence the params."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack = stack_round(batchers, range(4), local_epochs=1)
+    asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=3)
+    sim = np.array([2.0, 1.0, 3.0, 50.0])
+    tr_a, m_a = asy.run_stacked(params, 0, stack, sim_times=sim)
+    assert m_a["n_pending"] == 1
+    assert m_a["staleness"].tolist() == [0, 0, 0, -1]
+    assert m_a["sim_round_time"] == 3.0      # not 50
+    # moving the straggler further out changes nothing
+    sim2 = np.array([2.0, 1.0, 3.0, 500.0])
+    tr_b, m_b = asy.run_stacked(params, 0, stack, sim_times=sim2)
+    _assert_trees_close(tr_a, tr_b, rtol=0, atol=0)
+    assert m_b["sim_round_time"] == 3.0
+
+
+def test_async_staleness_discount_shrinks_late_flushes(cnn_setup):
+    """Polynomial staleness must pull the aggregate toward the fresh flush
+    relative to the undiscounted two-flush round."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack = stack_round(batchers, range(4), local_epochs=1)
+    sim = np.arange(1.0, 5.0)
+    flat = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=2,
+                                staleness_schedule="constant")
+    disc = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=2,
+                                staleness_schedule="polynomial",
+                                staleness_alpha=1.0)
+    tr_flat, _ = flat.run_stacked(params, 0, stack, sim_times=sim)
+    tr_disc, _ = disc.run_stacked(params, 0, stack, sim_times=sim)
+    _, base = adapter.split_stage(params, 0)
+    # discounted round takes a strictly smaller total step from the base
+    step = lambda tr: float(sum(
+        np.abs(np.asarray(a, np.float64) - np.asarray(b, np.float64)).sum()
+        for a, b in zip(jax.tree.leaves(tr), jax.tree.leaves(base))))
+    assert step(tr_disc) < step(tr_flat)
+
+
+def test_async_zero_weight_stack_rejected(cnn_setup):
+    adapter, params, batchers = cnn_setup
+    asy = AsyncBufferedRuntime(adapter, sgd(0.05), CurriculumHP())
+    stack = stack_round(batchers, [0], local_epochs=1)
+    stack.weights = np.zeros_like(stack.weights)
+    with pytest.raises(ValueError):
+        asy.run_stacked(params, 0, stack)
+
+
+def test_async_rejects_bad_schedule_eagerly(cnn_setup):
+    adapter, _, _ = cnn_setup
+    with pytest.raises(ValueError):
+        AsyncBufferedRuntime(adapter, sgd(0.05), CurriculumHP(),
+                             staleness_schedule="warp")
+
+
+# --------------------------------------------------------------------------- #
+# dropout / fault injection
+# --------------------------------------------------------------------------- #
+def test_dropout_prob_schedules():
+    assert dropout_prob("none", 0.5, 3) == 0.0
+    assert dropout_prob("constant", 0.2, 7) == 0.2
+    np.testing.assert_allclose(dropout_prob("ramp", 0.5, 0), 0.05)
+    np.testing.assert_allclose(dropout_prob("ramp", 0.5, 9), 0.5)
+    np.testing.assert_allclose(dropout_prob("ramp", 0.5, 99), 0.5)
+    with pytest.raises(ValueError):
+        dropout_prob("sometimes", 0.5, 0)
+
+
+def test_sample_fault_steps_bounds():
+    rng = np.random.default_rng(0)
+    faults = sample_fault_steps(rng, [5] * 200, prob=0.5)
+    crashed = [f for f in faults if f is not None]
+    assert 40 < len(crashed) < 160
+    assert all(0 <= f < 5 for f in crashed)
+    assert sample_fault_steps(rng, [5, 5], prob=0.0) == [None, None]
+
+
+def test_faulted_cohort_update_matches_shorter_run(cnn_setup):
+    """A cohort that crashes after k steps must contribute exactly what a
+    k-step cohort would: the masked tail is a no-op on params."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    vec = VectorizedRuntime(adapter, opt, hp)
+    stack = stack_round(batchers[:2], [0, 1], local_steps=4)
+    faulted = truncate_step_mask(stack, [2, None])
+    tr_f, _ = vec.run_stacked(params, 0, faulted)
+    # reference: same batches, mask hand-truncated, weight hand-scaled
+    ref = stack_round(batchers[:2], [0, 1], local_steps=4)
+    ref.batches = stack.batches          # identical data, not a re-draw
+    ref.step_mask = np.asarray([[True, True, False, False], [True] * 4])
+    ref.weights = np.asarray(
+        [stack.weights[0] * 0.5, stack.weights[1]], np.float32)
+    tr_r, _ = vec.run_stacked(params, 0, ref)
+    _assert_trees_close(tr_f, tr_r, rtol=1e-5, atol=1e-6)
+
+
+def test_crashed_cohorts_never_deliver(cnn_setup):
+    """Clients that crash before completing one step never deliver: they
+    take no buffer slot, consume no staleness level, and must not displace
+    a real update into pending (regression: the staleness discount used to
+    index by flush position, and dead cohorts used to fill buffers)."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack = stack_round(batchers[:2], [0, 1], local_steps=4)
+    # cohort 0 crashes at step 0 and (having done no work) "arrives" first;
+    # cohort 1 is the round's only real update
+    faulted = truncate_step_mask(stack, [0, None])
+    asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=1,
+                               staleness_schedule="polynomial",
+                               staleness_alpha=1.0)
+    tr_a, m_a = asy.run_stacked(params, 0, faulted,
+                                sim_times=[0.0, 4.0])
+    assert m_a["staleness"].tolist() == [-1, 0]      # fresh, not discounted
+    assert m_a["n_uploads"] == 1 and m_a["n_pending"] == 0
+    # equivalent synchronous round: cohort 1 alone carries all the weight
+    vec = VectorizedRuntime(adapter, opt, hp)
+    tr_v, _ = vec.run_stacked(params, 0, faulted)
+    _assert_trees_close(tr_v, tr_a, rtol=1e-4, atol=1e-5)
+
+
+def test_dead_cohorts_do_not_displace_survivor(cnn_setup):
+    """Two step-0 crashes + one survivor with K=2: the survivor's update
+    must be aggregated, not pushed into pending by dead buffer slots."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=2)
+    out = asy.run_round(params, 0, batchers, [0, 1, 2], 1,
+                        faults=[0, 0, None])
+    assert out.n_uploads == 1
+    assert np.isfinite(float(out.mean_loss))
+    # params actually moved (the survivor's delta was applied)
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(out.params),
+                        jax.tree.leaves(params)))
+    assert moved
+
+
+def test_async_upload_accounting_excludes_pending(cnn_setup):
+    """Pending stragglers' deltas are dropped, so they must not count as
+    uploads in the round metrics."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    asy = AsyncBufferedRuntime(adapter, opt, CurriculumHP(mu=0.01),
+                               buffer_size=3)
+    out = asy.run_round(params, 0, batchers, [0, 1, 2, 3], 1)
+    assert out.n_uploads == 3                        # 1 straggler pending
+
+
+def test_all_dropped_round_is_lost_but_safe(cnn_setup):
+    """Every client crashing at step 0 loses the round: params unchanged,
+    NaN loss — not a crash, not a silent zero-weight division."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    asy = AsyncBufferedRuntime(adapter, opt, CurriculumHP(mu=0.01),
+                               buffer_size=2)
+    out = asy.run_round(params, 0, batchers, [0, 1, 2], 1,
+                        faults=[0, 0, 0])
+    _assert_trees_close(out.params, params, rtol=0, atol=0)
+    assert np.isnan(float(out.mean_loss))
+    assert out.num_batches == [0, 0, 0]
+
+
+# --------------------------------------------------------------------------- #
+# server integration
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_server_async_rounds_with_dropout():
+    ds = make_image_dataset(0, 240, num_classes=4, image_size=8)
+    parts = dirichlet_partition(0, ds.labels, 6, alpha=1.0)
+    clients = [ds.subset(p) for p in parts]
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    flc = FLConfig(n_devices=6, clients_per_round=4, local_epochs=1,
+                   batch_size=16, num_stages=2, seed=0, runtime="async",
+                   buffer_size=3, staleness_schedule="polynomial",
+                   dropout_schedule="constant", dropout_rate=0.2)
+    srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients, flc)
+    assert isinstance(srv.runtime, AsyncBufferedRuntime)
+    assert srv.runtime.client_speeds   # fleet speeds drive the clock
+    hist = srv.run(3)
+    assert len(hist) == 3
+    for h in hist:
+        if h.n_selected and not np.isnan(h.mean_loss):
+            assert h.sim_time > 0
+    # the run must make real progress: at least one round aggregated
+    assert any(np.isfinite(h.mean_loss) for h in hist)

@@ -5,46 +5,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import CurriculumHP, make_adapter, make_transformer_adapter
+from repro.core import CurriculumHP, make_adapter
 from repro.data import Batcher, dirichlet_partition, make_image_dataset, \
     make_lm_dataset
 from repro.data.loader import stack_round
 from repro.federated import aggregation as agg
-from repro.federated.runtime import (SequentialRuntime, ShardedRuntime,
-                                     VectorizedRuntime, make_runtime)
+from repro.federated.runtime import (AsyncBufferedRuntime, SequentialRuntime,
+                                     ShardedRuntime, VectorizedRuntime,
+                                     make_runtime)
 from repro.federated.server import FLConfig, NeuLiteServer
 from repro.models.cnn import CNNConfig
-from repro.models.config import ModelConfig
 from repro.optim import sgd
 
-NUM_STAGES = 2
-
-
-@pytest.fixture(scope="module")
-def cnn_setup():
-    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
-                     image_size=8, width_mult=0.125)
-    adapter = make_adapter(ccfg, NUM_STAGES)
-    params = adapter.init_params(jax.random.PRNGKey(0))
-    ds = make_image_dataset(0, 200, num_classes=4, image_size=8)
-    parts = dirichlet_partition(0, ds.labels, 4, alpha=1.0)
-    batchers = [Batcher(ds.subset(p), 16, seed=i, kind="image")
-                for i, p in enumerate(parts)]
-    return adapter, params, batchers
-
-
-@pytest.fixture(scope="module")
-def tx_setup():
-    cfg = ModelConfig(name="t", family="dense", num_layers=4, d_model=32,
-                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
-                      dtype="float32")
-    adapter = make_transformer_adapter(cfg, NUM_STAGES)
-    params = adapter.init_params(jax.random.PRNGKey(0))
-    ds = make_lm_dataset(0, 96, 8, cfg.vocab_size)
-    idx = np.arange(len(ds))
-    batchers = [Batcher(ds.subset(idx[i::3]), 8, seed=i, kind="lm")
-                for i in range(3)]
-    return adapter, params, batchers
+# cnn_setup / tx_setup fixtures are shared via tests/conftest.py
 
 
 def _assert_trees_equal(a, b, **tol):
@@ -149,6 +122,46 @@ def test_non_prefix_mask_equivalence(cnn_setup):
     _assert_trees_equal(tr_s, tr_v, rtol=1e-4, atol=1e-5)
 
 
+# --------------------------------------------------------------------------- #
+# full backend-equivalence matrix: every array backend vs the sequential
+# reference on the same cohort data (async runs with a full buffer, so its
+# single flush at staleness 0 must reproduce the synchronous round)
+# --------------------------------------------------------------------------- #
+_MATRIX_BACKENDS = {
+    "vectorized": lambda a, o, h: VectorizedRuntime(a, o, h),
+    "sharded": lambda a, o, h: ShardedRuntime(a, o, h),
+    "async-zero-staleness": lambda a, o, h: AsyncBufferedRuntime(
+        a, o, h, buffer_size=0, staleness_schedule="polynomial"),
+}
+_MATRIX_REF = {}
+
+
+def _matrix_reference(setup, request):
+    """Per-setup cache: one stack + the sequential reference result."""
+    if setup not in _MATRIX_REF:
+        adapter, params, batchers = request.getfixturevalue(setup)
+        hp = CurriculumHP(mu=0.01) if setup == "cnn_setup" \
+            else CurriculumHP(enabled=False, mu=0.01)
+        opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+        stack = stack_round(batchers, range(len(batchers)), local_epochs=1)
+        seq = SequentialRuntime(adapter, opt, hp)
+        _MATRIX_REF[setup] = (adapter, params, opt, hp, stack,
+                              seq.run_stacked(params, 1, stack))
+    return _MATRIX_REF[setup]
+
+
+@pytest.mark.parametrize("backend", sorted(_MATRIX_BACKENDS))
+@pytest.mark.parametrize("setup", ["cnn_setup", "tx_setup"])
+def test_backend_matrix_matches_sequential(setup, backend, request):
+    adapter, params, opt, hp, stack, (tr_ref, m_ref) = \
+        _matrix_reference(setup, request)
+    rt = _MATRIX_BACKENDS[backend](adapter, opt, hp)
+    tr, m = rt.run_stacked(params, 1, stack)
+    _assert_trees_equal(tr_ref, tr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(m_ref["mean_local_loss"]),
+                               float(m["mean_local_loss"]), rtol=1e-4)
+
+
 def test_sharded_matches_vectorized(cnn_setup):
     adapter, params, batchers = cnn_setup
     opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
@@ -182,6 +195,28 @@ def test_weighted_average_zero_sum_raises():
         agg.weighted_average([tree], [float("nan")])
 
 
+def test_weighted_average_zero_sum_guard_edge_cases():
+    """The zero-sum guard, exercised directly: all-zero weights (every
+    cohort fully dropped), a single client, and mixed dropped cohorts."""
+    tree = {"w": jnp.asarray([1.0, 2.0, 3.0])}
+    # all-dropped cohort: completed-step weighting zeroes every weight
+    with pytest.raises(ValueError, match="positive finite"):
+        agg.weighted_average([tree, tree, tree], [0.0, 0.0, 0.0])
+    with pytest.raises(ValueError):
+        agg.weighted_average([tree], [0.0])           # single client, zero
+    with pytest.raises(ValueError):
+        agg.weighted_average([tree], [float("inf")])
+    # single client with positive weight: exactly its own params
+    out = agg.weighted_average([tree], [7.0])
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(tree["w"]), rtol=1e-6)
+    # partially-dropped cohort: zero-weight members contribute nothing
+    other = {"w": jnp.asarray([100.0, 100.0, 100.0])}
+    out = agg.weighted_average([tree, other], [5.0, 0.0])
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(tree["w"]), rtol=1e-6)
+
+
 def test_weighted_average_matches_manual_einsum():
     rng = np.random.default_rng(0)
     trees = [{"w": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32)}
@@ -206,6 +241,40 @@ def test_make_runtime_resolution(cnn_setup):
     assert make_runtime(rt, adapter, opt, hp) is rt       # passthrough
     with pytest.raises(ValueError):
         make_runtime("warp-drive", adapter, opt, hp)
+
+
+def test_evaluate_batched_matches_sequential_loop():
+    """The vmapped one-program evaluate must count exactly like the
+    per-batch reference loop on identical data (image and LM labels)."""
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    ds = make_image_dataset(0, 160, num_classes=4, image_size=8)
+    test = make_image_dataset(3, 96, num_classes=4, image_size=8)
+    flc = FLConfig(n_devices=4, clients_per_round=2, local_epochs=1,
+                   batch_size=16, num_stages=2, seed=0)
+    parts = dirichlet_partition(0, ds.labels, 4, alpha=1.0)
+    srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages),
+                        [ds.subset(p) for p in parts], flc)
+    # identical data: same-seed batchers replay the same shuffles
+    srv.test_batcher = Batcher(test, 32, seed=11, kind="image")
+    loop = srv.evaluate(max_batches=3, batched=False)
+    srv.test_batcher = Batcher(test, 32, seed=11, kind="image")
+    batched = srv.evaluate(max_batches=3, batched=True)
+    assert batched == loop
+
+
+def test_evaluate_batched_matches_loop_lm_labels(tx_setup):
+    adapter, params, _ = tx_setup
+    test = make_lm_dataset(5, 48, 8, 64)
+    flc = FLConfig(n_devices=2, clients_per_round=1, local_epochs=1,
+                   batch_size=8, num_stages=2, seed=0)
+    srv = NeuLiteServer(adapter, [test], flc, data_kind="lm")
+    srv.params = params
+    srv.test_batcher = Batcher(test, 16, seed=3, kind="lm")
+    loop = srv.evaluate(max_batches=2, batched=False)
+    srv.test_batcher = Batcher(test, 16, seed=3, kind="lm")
+    batched = srv.evaluate(max_batches=2, batched=True)
+    assert batched == loop
 
 
 @pytest.mark.slow

@@ -1,0 +1,102 @@
+"""Property-based invariants of the cohort batch stack and dropout
+truncation (hypothesis; conftest shims a seeded fallback when absent).
+
+The contract under test: however ragged the per-cohort step counts and
+however dropout truncates them, ``stack_round``/``truncate_step_mask`` must
+(a) keep every cohort's Eq. 1 weight at or below its TRUE sample count —
+wraparound resampling and fault injection can never inflate FedAvg weights —
+and (b) keep the step mask consistent with the reported true step counts,
+so completed-step-weighted aggregation falls out of the mask semantics.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import Batcher, make_image_dataset
+from repro.data.loader import stack_round, truncate_step_mask
+
+import pytest
+
+
+def _batchers(sizes, batch_size):
+    return [Batcher(make_image_dataset(i, n, num_classes=4, image_size=4),
+                    batch_size, seed=i, kind="image")
+            for i, n in enumerate(sizes)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes=st.lists(st.integers(1, 50), min_size=1, max_size=4),
+       batch_size=st.integers(2, 16),
+       local_epochs=st.integers(1, 3))
+def test_stack_round_mask_and_weight_invariants(sizes, batch_size,
+                                                local_epochs):
+    stack = stack_round(_batchers(sizes, batch_size),
+                        local_epochs=local_epochs)
+    # weights are the TRUE sample counts — wraparound resampling for
+    # datasets smaller than one batch must never inflate them
+    assert stack.weights.tolist() == [float(n) for n in sizes]
+    # mask rows are True-prefixes matching the true step counts
+    mask = stack.step_mask
+    assert mask.shape[0] == len(sizes)
+    for row, nb in zip(mask, stack.num_batches):
+        assert int(row.sum()) == nb
+        assert row[:nb].all() and not row[nb:].any()
+    assert max(stack.num_batches) == stack.max_steps
+    # every batch leaf carries the (C, E) leading axes
+    import jax
+    for leaf in jax.tree.leaves(stack.batches):
+        assert leaf.shape[:2] == mask.shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes=st.lists(st.integers(1, 50), min_size=1, max_size=4),
+       batch_size=st.integers(2, 16),
+       local_epochs=st.integers(1, 3),
+       draws=st.lists(st.integers(0, 10 ** 6), min_size=4, max_size=4),
+       survive=st.lists(st.booleans(), min_size=4, max_size=4))
+def test_truncation_never_inflates_weights(sizes, batch_size, local_epochs,
+                                           draws, survive):
+    stack = stack_round(_batchers(sizes, batch_size),
+                        local_epochs=local_epochs)
+    C = stack.num_cohorts
+    faults = [None if survive[i] else draws[i] % (stack.num_batches[i] + 1)
+              for i in range(C)]
+    out = truncate_step_mask(stack, faults)
+
+    for i in range(C):
+        done = stack.num_batches[i] if faults[i] is None \
+            else min(faults[i], stack.num_batches[i])
+        # completed-step weighting: w' = w * done/target, never inflated
+        assert out.num_batches[i] == done
+        np.testing.assert_allclose(
+            out.weights[i],
+            stack.weights[i] * done / stack.num_batches[i], rtol=1e-6)
+        assert out.weights[i] <= stack.weights[i] + 1e-6
+        # the truncated mask row keeps exactly the first `done` true steps
+        assert int(out.step_mask[i].sum()) == done
+        assert (out.step_mask[i] <= stack.step_mask[i]).all()
+    # total effective samples can only shrink; cohorts that completed keep
+    # their exact weight (no cross-cohort renormalization at this seam)
+    assert out.weights.sum() <= stack.weights.sum() + 1e-6
+    for i in range(C):
+        if faults[i] is None or faults[i] >= stack.num_batches[i]:
+            assert out.weights[i] == stack.weights[i]
+
+
+@settings(max_examples=10, deadline=None)
+@given(sizes=st.lists(st.integers(1, 30), min_size=1, max_size=3),
+       local_epochs=st.integers(1, 2))
+def test_full_completion_truncation_is_identity(sizes, local_epochs):
+    stack = stack_round(_batchers(sizes, 8), local_epochs=local_epochs)
+    out = truncate_step_mask(stack, [None] * stack.num_cohorts)
+    np.testing.assert_array_equal(out.step_mask, stack.step_mask)
+    np.testing.assert_array_equal(out.weights, stack.weights)
+    assert out.num_batches == stack.num_batches
+
+
+def test_truncation_validates_inputs():
+    stack = stack_round(_batchers([20, 20], 8), local_epochs=1)
+    with pytest.raises(ValueError):
+        truncate_step_mask(stack, [0])              # wrong arity
+    with pytest.raises(ValueError):
+        truncate_step_mask(stack, [-1, None])       # negative steps
