@@ -15,12 +15,30 @@ a virtual clock: cohorts deliver deltas at ``steps / speed`` under a
 heterogeneous device-tier speed mix, the server flushes every K arrivals,
 and the simulated round wall-clock (last flush) is compared against the
 synchronous barrier (slowest straggler).
+
+``--model-parallel K`` reports the 2-D (data, model) sharded round: stage
+params / optimizer state / per-cohort local weights shard K-ways over the
+"model" axis, and the report compares per-device trainable bytes (and
+rounds/sec) against the replicated vectorized path.  Forces
+``--xla_force_host_platform_device_count=8`` when the host has too few
+devices.
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 from benchmarks.common import csv_row, timeit
+
+
+def _force_host_devices(n: int):
+    """Fake ``n`` CPU devices.  XLA reads the flag at backend init (the
+    first device query), so this works as long as it runs before any jax
+    device use — merely importing jax is fine."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
 
 
 def _setup(kind: str, num_cohorts: int, batch_size: int, local_steps: int,
@@ -106,6 +124,41 @@ def bench_async(kind: str, num_cohorts: int = 16, batch_size: int = 4,
             "n_flushes": int(metrics["staleness"].max()) + 1}
 
 
+def bench_model_parallel(kind: str, model_parallel: int,
+                         num_cohorts: int = 16, batch_size: int = 4,
+                         local_steps: int = 2, stage: int = 1,
+                         iters: int = 3):
+    """2-D sharded round vs the replicated vectorized path: rounds/sec and
+    per-device trainable bytes (the paper's client-memory axis)."""
+    import jax
+    from repro.federated.runtime import ShardedRuntime, VectorizedRuntime
+    from repro.launch.sharding import per_device_nbytes
+
+    adapter, params, opt, hp, stack = _setup(kind, num_cohorts, batch_size,
+                                             local_steps)
+    sharded = ShardedRuntime(adapter, opt, hp, model_parallel=model_parallel)
+    runtimes = {
+        "replicated": VectorizedRuntime(adapter, opt, hp),
+        # label with the mesh actually built: make_host_mesh clamps a
+        # non-divisor request, and the report must not attribute the
+        # measured ratio to a shard count that never ran
+        f"model-sharded x{sharded.model_shards}": sharded,
+    }
+    out = {}
+    for name, rt in runtimes.items():
+        new_tr, _ = rt.run_stacked(params, stage, stack)     # warmup + bytes
+
+        def one_round(rt=rt):
+            tr, metrics = rt.run_stacked(params, stage, stack)
+            return jax.tree.leaves(tr)[0], metrics["mean_local_loss"]
+
+        out[name] = {
+            "rounds_per_s": 1.0 / timeit(one_round, warmup=0, iters=iters),
+            "trainable_bytes_per_device": per_device_nbytes(new_tr),
+        }
+    return out
+
+
 def quick():
     for kind in ("cnn", "transformer"):
         rps = bench(kind, num_cohorts=16, batch_size=4, local_steps=2)
@@ -126,7 +179,27 @@ def main():
                     help="'async': simulated-time FedBuff speedup report")
     ap.add_argument("--buffer", type=int, default=0,
                     help="async buffer size K (0 = 3/4 of the cohort)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="report the 2-D (data, model) sharded round: "
+                         "per-device trainable bytes + rounds/s vs the "
+                         "replicated path")
     args = ap.parse_args()
+    if args.model_parallel > 1:
+        _force_host_devices(max(8, 2 * args.model_parallel))
+        print(f"{'model':12s} {'placement':>20s} {'rounds/s':>9s} "
+              f"{'trainable B/dev':>15s} {'ratio':>6s}")
+        for kind in ("cnn", "transformer"):
+            r = bench_model_parallel(kind, args.model_parallel,
+                                     args.cohorts, args.batch, args.steps,
+                                     args.stage, args.iters)
+            base = r["replicated"]["trainable_bytes_per_device"]
+            for name, row in r.items():
+                ratio = row["trainable_bytes_per_device"] / base
+                print(f"{kind:12s} {name:>20s} "
+                      f"{row['rounds_per_s']:9.2f} "
+                      f"{row['trainable_bytes_per_device']:15d} "
+                      f"{ratio:5.2f}x")
+        return
     if args.runtime == "async":
         print(f"{'model':12s} {'K':>4s} {'flushes':>7s} {'pending':>7s} "
               f"{'t_sync':>8s} {'t_async':>8s} {'speedup':>8s}")

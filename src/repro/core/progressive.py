@@ -65,10 +65,32 @@ def _slice_tree(tree, s: int, e: int):
     return jax.tree.map(lambda x: x[s:e], tree)
 
 
+def _colocate(f, p):
+    """Move ``f`` onto ``p``'s sharding before an eager update-slice.
+
+    The 2-D ``ShardedRuntime`` returns trainable slices committed to a
+    (data, model) mesh with model-sharded leaves; the full param stack may
+    still live on one device (or a previous stage's sharding).  Mixing the
+    two in one eager op either fails ("incompatible devices") or silently
+    gathers — resharding the *stack* to the slice's sharding instead keeps
+    the merged params model-sharded across stages, so the next stage's
+    split hands the runtime already-placed leaves.  The stacked layer axis
+    (dim 0) is never sharded in the logical specs, so the slice's sharding
+    applies to the full stack as-is.
+    """
+    sharding = getattr(p, "sharding", None)
+    if sharding is None or getattr(f, "sharding", None) == sharding:
+        return f
+    if getattr(sharding, "num_devices", 1) > 1:
+        return jax.device_put(f, sharding)
+    return f
+
+
 def _setslice_tree(full, part, s: int):
     return jax.tree.map(
         lambda f, p: f if p.shape[0] == 0 else
-        jax.lax.dynamic_update_slice_in_dim(f, p.astype(f.dtype), s, 0),
+        jax.lax.dynamic_update_slice_in_dim(
+            _colocate(f, p), p.astype(f.dtype), s, 0),
         full, part)
 
 

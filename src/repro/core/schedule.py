@@ -14,6 +14,7 @@ Two policies from the paper:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional
 
 
@@ -59,11 +60,28 @@ class PlateauSchedule(StageSchedule):
     _best: Optional[float] = None
     _bad: int = 0
     _rounds_in_stage: int = 0
+    _lost: int = 0
 
     def stage(self, round_idx: int) -> int:
         return self._stage
 
     def observe(self, round_idx: int, metric: float) -> None:
+        if not math.isfinite(metric):
+            # Lost rounds (empty selection / every client dropped) observe
+            # NaN.  A NaN must never become ``_best`` — every later
+            # ``metric < NaN - delta`` is False, so the stage would
+            # force-advance after ``patience`` rounds even while the model
+            # improves — and a lost round says nothing about convergence,
+            # so it counts toward neither patience nor the
+            # ``max_rounds_per_stage`` budget.  A run whose *every* round is
+            # non-finite (divergence, not dropout) must still hit the
+            # budget backstop, so consecutive lost rounds get their own
+            # counter; any finite observation resets it.
+            self._lost += 1
+            if self._lost >= self.max_rounds_per_stage:
+                self._advance()
+            return
+        self._lost = 0
         self._rounds_in_stage += 1
         improved = self._best is None or metric < self._best - self.min_delta
         if improved:
@@ -72,9 +90,13 @@ class PlateauSchedule(StageSchedule):
             self._bad += 1
         if (self._bad >= self.patience
                 or self._rounds_in_stage >= self.max_rounds_per_stage):
-            if self._stage < self.num_stages - 1:
-                self._stage += 1
-                self._best, self._bad, self._rounds_in_stage = None, 0, 0
+            self._advance()
+
+    def _advance(self) -> None:
+        if self._stage < self.num_stages - 1:
+            self._stage += 1
+            self._best, self._bad = None, 0
+            self._rounds_in_stage = self._lost = 0
 
     @property
     def converged_all(self) -> bool:

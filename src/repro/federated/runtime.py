@@ -11,10 +11,16 @@ those identical semantics at different points on the throughput curve:
   VectorizedRuntime    — ONE jitted program per stage: cohort-vmapped
                          ``lax.scan`` local training fused with the Eq. 1
                          aggregation einsum (the round's single collective).
-  ShardedRuntime       — the same program under ``shard_map`` over a launch
-                         mesh; the cohort axis shards across devices and the
-                         aggregation lowers to one ``psum`` — the all-reduce
-                         the roofline dry-run measures.
+  ShardedRuntime       — the same program over a 2-D (data, model) launch
+                         mesh: the cohort axis shards over "data" and the
+                         aggregation lowers to one all-reduce over "data" —
+                         the collective the roofline dry-run measures.  With
+                         ``model_parallel > 1`` stage params, optimizer
+                         state, and per-cohort local weights additionally
+                         shard over "model" via the adapter's logical
+                         ParamDef specs (``launch.sharding``), so clients
+                         whose trainable block does not fit one device
+                         still train.
   AsyncBufferedRuntime — FedBuff-style buffered aggregation on a virtual
                          clock: clients deliver deltas at their own
                          simulated pace, the server flushes every K arrivals
@@ -91,7 +97,8 @@ def make_local_program(adapter: Adapter, optimizer, hp: CurriculumHP,
 
 
 def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
-                       *, axis: Optional[str] = None):
+                       *, axis: Optional[str] = None,
+                       locals_shardings: Any = None):
     """round_fn(trainable, frozen, batches, weights, step_mask)
          -> (new_trainable, metrics)
 
@@ -103,11 +110,21 @@ def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
     With ``axis`` set the program is written for ``shard_map``: the cohort
     axis is device-local and the aggregation / loss reductions become
     ``psum`` collectives over that mesh axis.
+
+    With ``locals_shardings`` set (a NamedSharding tree matching the
+    trainable subtree with a leading cohort axis) the program instead
+    targets GSPMD on a 2-D (data, model) mesh: the per-cohort local weights
+    are constrained to shard (cohort → "data", params → "model"), so the
+    Eq. 1 contraction lowers to one all-reduce over "data" only while each
+    model shard keeps owning its slice of the result — no gather.
     """
     local_fn = make_local_program(adapter, optimizer, hp, t)
 
     def round_fn(trainable, frozen, batches, weights, step_mask):
         locals_, losses = local_fn(trainable, frozen, batches, step_mask)
+        if locals_shardings is not None:
+            locals_ = jax.lax.with_sharding_constraint(locals_,
+                                                       locals_shardings)
         total = weights.sum().astype(jnp.float32)
         if axis is not None:
             total = jax.lax.psum(total, axis)
@@ -128,8 +145,7 @@ def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
     return round_fn
 
 
-def make_fl_round_step(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
-                       local_steps: Optional[int] = None):
+def make_fl_round_step(adapter: Adapter, optimizer, hp: CurriculumHP, t: int):
     """Legacy entry point (was federated.distributed.make_fl_round_step).
 
     round_fn(trainable, frozen, batches, weights) with an all-true step
@@ -203,6 +219,15 @@ class ClientRuntime:
     def _run_stack(self, t: int, trainable, frozen, stack: RoundStack):
         raise NotImplementedError
 
+    def _lost_round_extras(self, stack: RoundStack,
+                           cohorts: Sequence[int]) -> dict:
+        """``RoundOutcome`` extras for an all-dropped (lost) round.
+
+        The async backend overrides this to report its virtual clock — a
+        lost round it never waited on must not fall back to the server's
+        synchronous straggler wall-clock."""
+        return {}
+
     # -- shared driver ----------------------------------------------------- #
     def run_stacked(self, params, t: int, stack: RoundStack):
         """One round on a prepared stack -> (new_trainable, metrics)."""
@@ -243,7 +268,8 @@ class ClientRuntime:
                 cohort_losses=jnp.zeros(stack.num_cohorts),
                 num_batches=list(stack.num_batches),
                 num_samples=[float(w) for w in stack.weights],
-                n_uploads=0)
+                n_uploads=0,
+                **self._lost_round_extras(stack, cohorts))
         new_trainable, metrics, extras = self._round_from_stack(
             params, t, stack, cohorts)
         extras.setdefault(
@@ -364,46 +390,113 @@ class VectorizedRuntime(ClientRuntime):
 
 
 class ShardedRuntime(VectorizedRuntime):
-    """The vectorized program under ``shard_map`` over a launch mesh.
+    """The vectorized program over a 2-D ``(data, model)`` launch mesh.
 
-    The cohort axis shards over ``axis`` (default the mesh's "data" axis);
-    params stay replicated and the Eq. 1 aggregation lowers to one psum —
-    FL's single per-round collective.  Cohort counts that don't divide the
-    axis size are padded with zero-weight, fully-masked cohorts.
+    The cohort axis always shards over ``axis`` (the mesh's "data" axis).
+    What happens along the model axis depends on the mesh:
+
+    * ``model`` axis of size 1 (the default host mesh) — stage params stay
+      replicated and the program runs under ``shard_map`` with the Eq. 1
+      aggregation as one explicit ``psum`` over "data": FL's single
+      per-round collective, the one the roofline dry-run measures.
+    * ``model`` axis > 1 (``model_parallel=k`` or an explicit 2-D mesh) —
+      stage params, optimizer state, and the per-cohort local weights
+      additionally shard over "model" using the adapter's logical ParamDef
+      specs (``launch.sharding.fit_spec`` / ``tree_shardings`` — the same
+      specs the production mesh uses), so the per-device trainable block
+      shrinks by ~1/k and paper-scale clients fit where replication does
+      not.  The program runs under GSPMD (``jax.jit`` with NamedSharding
+      placements, as ``launch.steps`` does): the Eq. 1 contraction still
+      lowers to a single all-reduce over "data" only — each model shard
+      owns its slice of the aggregate, no gather — and batch leaves pick up
+      ``batch_spec`` placement on the cohort axis.
+
+    Cohort counts that don't divide the data-axis size are padded with
+    zero-weight, fully-masked cohorts.
     """
 
     name = "sharded"
 
     def __init__(self, adapter, optimizer, hp, *, mesh=None,
-                 axis: str = "data"):
+                 axis: str = "data", model_axis: str = "model",
+                 model_parallel: int = 1):
         super().__init__(adapter, optimizer, hp)
         if mesh is None:
             from repro.launch.mesh import make_host_mesh
-            mesh = make_host_mesh(1)
+            mesh = make_host_mesh(model_parallel)
+        elif (model_parallel != 1
+              and dict(mesh.shape).get(model_axis, 1) != model_parallel):
+            raise ValueError(
+                f"model_parallel={model_parallel} contradicts the explicit "
+                f"mesh (shape {dict(mesh.shape)}): pass one or the other "
+                f"— a mesh whose '{model_axis}' axis disagrees would "
+                f"silently run with the mesh's sharding, not the request")
         self.mesh = mesh
         self.axis = axis
+        self.model_axis = model_axis
+        self._placements: Dict[int, Any] = {}
 
     @property
     def _shards(self) -> int:
         return self.mesh.shape[self.axis]
 
+    @property
+    def model_shards(self) -> int:
+        return dict(self.mesh.shape).get(self.model_axis, 1)
+
     def _program(self, t: int):
         if t not in self._programs:
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import PartitionSpec as P
-            program = make_round_program(self.adapter, self.optimizer,
-                                         self.hp, t, axis=self.axis)
-            sharded = shard_map(
-                program, mesh=self.mesh,
-                in_specs=(P(), P(), P(self.axis), P(self.axis),
-                          P(self.axis)),
-                out_specs=(P(), {"mean_local_loss": P(),
-                                 "cohort_losses": P(self.axis)}),
-                check_rep=False)
             from repro.core.progressive import donation_supported
-            self._programs[t] = jax.jit(
-                sharded, donate_argnums=(2,) if donation_supported() else ())
+            donate = (2,) if donation_supported() else ()
+            if self.model_shards > 1:
+                self._programs[t] = jax.jit(self._build_2d(t),
+                                            out_shardings=self._out_sh(t),
+                                            donate_argnums=donate)
+            else:
+                self._programs[t] = jax.jit(self._build_1d(t),
+                                            donate_argnums=donate)
         return self._programs[t]
+
+    def _build_1d(self, t: int):
+        """Replicated-params path: explicit psum under ``shard_map``."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        program = make_round_program(self.adapter, self.optimizer,
+                                     self.hp, t, axis=self.axis)
+        return shard_map(
+            program, mesh=self.mesh,
+            in_specs=(P(), P(), P(self.axis), P(self.axis),
+                      P(self.axis)),
+            out_specs=(P(), {"mean_local_loss": P(),
+                             "cohort_losses": P(self.axis)}),
+            check_rep=False)
+
+    def _build_2d(self, t: int):
+        """Model-sharded path: GSPMD over the (data, model) mesh."""
+        from repro.launch.sharding import stacked_tree_shardings
+        locals_sh = stacked_tree_shardings(
+            self.adapter.split_stage(self.adapter.defs, t)[1],
+            self.mesh, self.axis)
+        return make_round_program(self.adapter, self.optimizer, self.hp, t,
+                                  locals_shardings=locals_sh)
+
+    def _stage_placements(self, t: int):
+        """(trainable, frozen, cohort-axis) NamedShardings for stage t."""
+        if t not in self._placements:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.sharding import tree_shardings
+            frozen_defs, trainable_defs = self.adapter.split_stage(
+                self.adapter.defs, t)
+            self._placements[t] = (tree_shardings(trainable_defs, self.mesh),
+                                   tree_shardings(frozen_defs, self.mesh),
+                                   NamedSharding(self.mesh, P(self.axis)))
+        return self._placements[t]
+
+    def _out_sh(self, t: int):
+        from repro.launch.sharding import replicated
+        tr_sh, _, cohort_sh = self._stage_placements(t)
+        return (tr_sh, {"mean_local_loss": replicated(self.mesh),
+                        "cohort_losses": cohort_sh})
 
     def _device_stack(self, stack: RoundStack):
         batches, weights, mask = super()._device_stack(stack)
@@ -419,9 +512,29 @@ class ShardedRuntime(VectorizedRuntime):
                 [mask, jnp.zeros((pad, mask.shape[1]), bool)])
         return batches, weights, mask
 
+    def _place_2d(self, t, trainable, frozen, batches, weights, mask):
+        """Commit round inputs to their 2-D placements before the call:
+        params/optimizer state onto the model axis, the cohort stack onto
+        the data axis (the batch leaves via ``batch_spec``)."""
+        from jax.sharding import NamedSharding
+        from repro.launch.sharding import batch_spec
+        tr_sh, fr_sh, cohort_sh = self._stage_placements(t)
+        batches = jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(
+                self.mesh, batch_spec(x.shape, self.mesh))), batches)
+        return (jax.device_put(trainable, tr_sh),
+                jax.device_put(frozen, fr_sh), batches,
+                jax.device_put(weights, cohort_sh),
+                jax.device_put(mask, cohort_sh))
+
     def _run_stack(self, t, trainable, frozen, stack: RoundStack):
-        new_trainable, metrics = super()._run_stack(t, trainable, frozen,
-                                                    stack)
+        batches, weights, mask = self._device_stack(stack)
+        program = self._program(t)
+        if self.model_shards > 1:
+            trainable, frozen, batches, weights, mask = self._place_2d(
+                t, trainable, frozen, batches, weights, mask)
+        new_trainable, metrics = program(trainable, frozen, batches,
+                                         weights, mask)
         C = stack.num_cohorts
         metrics = dict(metrics,
                        cohort_losses=metrics["cohort_losses"][:C])
@@ -565,10 +678,12 @@ class AsyncBufferedRuntime(ClientRuntime):
             lambda loc, base: loc.astype(jnp.float32)
             - base.astype(jnp.float32), locals_, trainable)
         new_tr = jax.tree.map(lambda b: b.astype(jnp.float32), trainable)
+        # the plan already assigned per-delivery staleness (flush index);
+        # scatter it back to full cohort indexing rather than recomputing
         staleness = np.full(len(weights), -1, int)
+        staleness[active] = plan.staleness
         for j, f in enumerate(plan.flushes):
             idx = active[f]
-            staleness[idx] = j
             d = agg.staleness_discount(np.full(len(idx), j),
                                        self.staleness_schedule,
                                        self.staleness_alpha)
@@ -603,6 +718,14 @@ class AsyncBufferedRuntime(ClientRuntime):
             "sim_times": [float(x) for x in sim_times],
             "round_sim_time": float(metrics["sim_round_time"]),
             "n_uploads": metrics["n_uploads"]}
+
+    def _lost_round_extras(self, stack, cohorts):
+        # a lost round delivers nothing: the buffered server flushes zero
+        # times and never waits, so its virtual clock never advances —
+        # report that instead of letting the server fall back to the
+        # synchronous straggler wall-clock for a barrier it never had
+        return {"round_sim_time": 0.0,
+                "sim_times": [0.0] * stack.num_cohorts}
 
 
 RUNTIMES = {"sequential": SequentialRuntime,

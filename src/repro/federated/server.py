@@ -62,6 +62,10 @@ class FLConfig:
     seed: int = 0
     runtime: str = "sequential"         # sequential | vectorized | sharded
                                         # | async
+    # --- 2-D sharded rounds; used when runtime == "sharded" ---
+    model_parallel: int = 1             # "model"-axis size of the host mesh
+                                        # (1 = replicate params, shard only
+                                        # the cohort axis)
     # --- buffered-async (FedBuff) rounds; used when runtime == "async" ---
     buffer_size: int = 0                # server flushes every K deliveries
                                         # (0 = cohort size: synchronous)
@@ -105,6 +109,8 @@ class NeuLiteServer:
                              staleness_schedule=flc.staleness_schedule,
                              staleness_alpha=flc.staleness_alpha,
                              server_lr=flc.server_lr)
+        elif spec == "sharded":
+            rt_kwargs = dict(model_parallel=flc.model_parallel)
         self.runtime = make_runtime(spec, adapter, self.optimizer, self.hp,
                                     **rt_kwargs)
         self.test_batcher = test_batcher

@@ -8,6 +8,8 @@ state (the dry-run must set XLA_FLAGS before the first jax call).
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 
@@ -18,9 +20,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model_parallel: int = 1):
-    """Small mesh over whatever local devices exist (tests / examples)."""
+    """Small mesh over whatever local devices exist (tests / examples).
+
+    ``model_parallel`` is clamped to the largest divisor of the device count
+    that does not exceed the request — a non-divisor request (e.g. 3-way on
+    8 devices) would otherwise build a mesh that drops devices or crashes.
+    """
     n = len(jax.devices())
-    mp = max(1, min(model_parallel, n))
+    req = max(1, int(model_parallel))
+    mp = min(req, n)
+    if n % mp:
+        mp = max(d for d in range(1, mp + 1) if n % d == 0)
+    if mp != req:
+        warnings.warn(
+            f"model_parallel={model_parallel} does not fit the "
+            f"{n}-device host; clamping to {mp}", stacklevel=2)
     return jax.make_mesh((n // mp, mp), ("data", "model"))
 
 

@@ -118,5 +118,46 @@ def batch_shardings(sds_tree, mesh, policy: str = "tp"):
         sds_tree)
 
 
+def stacked_tree_shardings(def_tree, mesh, leading_axis: str = "data"):
+    """ParamDef tree -> NamedShardings for leaves stacked on a leading
+    cohort axis.
+
+    Each leaf's *parameter* dims keep the ``fit_spec``-adapted logical spec
+    (tensor parallelism over "model"), while the new leading cohort axis
+    shards over ``leading_axis``.  This is the placement of the per-cohort
+    local weights inside the 2-D round program: (C, *param_shape) leaves
+    sharded (data, *model_spec).  The caller is responsible for padding the
+    cohort axis to a multiple of the data-axis size (``ShardedRuntime``
+    already does).
+    """
+    lead = (leading_axis if leading_axis in mesh.axis_names
+            and mesh.shape[leading_axis] > 1 else None)
+
+    def fit(d: PD.ParamDef):
+        spec = fit_spec(d.shape, d.spec, mesh)
+        return NamedSharding(mesh, P(lead, *spec))
+
+    return jax.tree.map(fit, def_tree, is_leaf=PD.is_def)
+
+
+def per_device_nbytes(tree) -> int:
+    """Bytes one device holds for a pytree of (possibly sharded) arrays.
+
+    For a ``NamedSharding``-committed leaf this is the single-shard
+    footprint (``sharding.shard_shape``); replicated / host leaves count in
+    full — so replicated vs model-sharded trainable state compare directly
+    (the benchmark's per-device trainable-bytes report).
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = tuple(np.shape(leaf))
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "shard_shape"):
+            shape = sharding.shard_shape(shape)
+        itemsize = np.dtype(getattr(leaf, "dtype", np.float32)).itemsize
+        total += int(np.prod(shape)) * itemsize
+    return total
+
+
 def replicated(mesh):
     return NamedSharding(mesh, P())

@@ -201,7 +201,7 @@ def build_fl_round(cfg: ModelConfig, shape_name: str, mesh,
     t = adapter.plan.num_stages // 2 if stage is None else stage
     optimizer = make_optimizer(optimizer_name)
     hp = CurriculumHP()
-    round_fn = make_fl_round_step(adapter, optimizer, hp, t, local_steps)
+    round_fn = make_fl_round_step(adapter, optimizer, hp, t)
 
     C = _mesh_batch_shards(mesh)
     B, S = shape.global_batch, shape.seq_len

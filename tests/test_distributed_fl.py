@@ -36,8 +36,7 @@ def test_fl_round_matches_sequential():
     frozen, trainable = adapter.split_stage(params, t)
 
     # one-shot pjit round
-    round_fn = jax.jit(make_fl_round_step(adapter, opt, hp, t,
-                                          local_steps=E))
+    round_fn = jax.jit(make_fl_round_step(adapter, opt, hp, t))
     new_tr, metrics = round_fn(trainable, frozen, batches, weights)
 
     # sequential reference: per-client local training + weighted average
@@ -75,7 +74,7 @@ def test_fl_round_no_cross_cohort_leakage():
         tk[1] = toks1
         batches = {"inputs": {"tokens": jnp.asarray(tk)},
                    "labels": jnp.asarray(labels)}
-        round_fn = make_fl_round_step(adapter, opt, hp, t, local_steps=E)
+        round_fn = make_fl_round_step(adapter, opt, hp, t)
         # aggregate with all weight on cohort 0
         new_tr, _ = round_fn(trainable, frozen, batches,
                              jnp.asarray([1.0, 0.0]))

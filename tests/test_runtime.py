@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import CurriculumHP, make_adapter
+from repro.core import CurriculumHP, PlateauSchedule, make_adapter
 from repro.data import Batcher, dirichlet_partition, make_image_dataset, \
     make_lm_dataset
 from repro.data.loader import stack_round
@@ -125,11 +125,20 @@ def test_non_prefix_mask_equivalence(cnn_setup):
 # --------------------------------------------------------------------------- #
 # full backend-equivalence matrix: every array backend vs the sequential
 # reference on the same cohort data (async runs with a full buffer, so its
-# single flush at staleness 0 must reproduce the synchronous round)
+# single flush at staleness 0 must reproduce the synchronous round; the 2-D
+# sharded backend additionally shards params over the "model" axis and only
+# runs on a multi-device host — CI forces 8 CPU devices via
+# XLA_FLAGS=--xla_force_host_platform_device_count=8)
 # --------------------------------------------------------------------------- #
+needs_multidevice = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="2-D (data, model) mesh needs >= 4 devices "
+           "(run with XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
 _MATRIX_BACKENDS = {
     "vectorized": lambda a, o, h: VectorizedRuntime(a, o, h),
     "sharded": lambda a, o, h: ShardedRuntime(a, o, h),
+    "sharded-2d": lambda a, o, h: ShardedRuntime(a, o, h, model_parallel=2),
     "async-zero-staleness": lambda a, o, h: AsyncBufferedRuntime(
         a, o, h, buffer_size=0, staleness_schedule="polynomial"),
 }
@@ -150,7 +159,9 @@ def _matrix_reference(setup, request):
     return _MATRIX_REF[setup]
 
 
-@pytest.mark.parametrize("backend", sorted(_MATRIX_BACKENDS))
+@pytest.mark.parametrize("backend", [
+    pytest.param(b, marks=(needs_multidevice,) if b == "sharded-2d" else ())
+    for b in sorted(_MATRIX_BACKENDS)])
 @pytest.mark.parametrize("setup", ["cnn_setup", "tx_setup"])
 def test_backend_matrix_matches_sequential(setup, backend, request):
     adapter, params, opt, hp, stack, (tr_ref, m_ref) = \
@@ -173,6 +184,47 @@ def test_sharded_matches_vectorized(cnn_setup):
     tr_h, m_h = sh.run_stacked(params, 0, stack)
     _assert_trees_equal(tr_v, tr_h, rtol=1e-4, atol=1e-5)
     assert m_h["cohort_losses"].shape == m_v["cohort_losses"].shape
+
+
+@needs_multidevice
+def test_sharded_2d_matches_vectorized_all_stages(cnn_setup):
+    """2-D (data, model) rounds must reproduce the replicated vectorized
+    round stage by stage, including merge back into (sharded) full params."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    vec = VectorizedRuntime(adapter, opt, hp)
+    sh2 = ShardedRuntime(adapter, opt, hp, model_parallel=2)
+    assert sh2.model_shards == 2
+    stack = stack_round(batchers, range(len(batchers)), local_epochs=1)
+    for t in range(adapter.plan.num_stages):
+        tr_v, m_v = vec.run_stacked(params, t, stack)
+        tr_s, m_s = sh2.run_stacked(params, t, stack)
+        _assert_trees_equal(tr_v, tr_s, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(m_v["mean_local_loss"]),
+                                   float(m_s["mean_local_loss"]), rtol=1e-4)
+        # merging the model-sharded trainable back must keep the full
+        # params usable (and sharded) for the next stage's split
+        merged_v = adapter.merge_stage(params, tr_v, t)
+        merged_s = adapter.merge_stage(params, tr_s, t)
+        _assert_trees_equal(merged_v, merged_s, rtol=1e-4, atol=1e-5)
+
+
+@needs_multidevice
+def test_sharded_2d_halves_per_device_trainable_bytes(cnn_setup):
+    """model_parallel=2 must place ~half the trainable bytes per device
+    (small unsharded leaves — norms, biases — keep it from exactly 1/2)."""
+    from repro.launch.sharding import per_device_nbytes
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack = stack_round(batchers, range(len(batchers)), local_epochs=1)
+    tr_v, _ = VectorizedRuntime(adapter, opt, hp).run_stacked(params, 1,
+                                                              stack)
+    tr_s, _ = ShardedRuntime(adapter, opt, hp,
+                             model_parallel=2).run_stacked(params, 1, stack)
+    replicated, sharded = per_device_nbytes(tr_v), per_device_nbytes(tr_s)
+    assert sharded < 0.65 * replicated, (sharded, replicated)
 
 
 def test_zero_weight_round_rejected(cnn_setup):
@@ -275,6 +327,81 @@ def test_evaluate_batched_matches_loop_lm_labels(tx_setup):
     srv.test_batcher = Batcher(test, 16, seed=3, kind="lm")
     batched = srv.evaluate(max_batches=2, batched=True)
     assert batched == loop
+
+
+# --------------------------------------------------------------------------- #
+# regression tests: lost-round / mesh correctness bugfixes
+# --------------------------------------------------------------------------- #
+def test_plateau_schedule_skips_nonfinite_observations():
+    """A lost round observes NaN.  NaN must neither become ``_best`` (which
+    would make every later improvement check False and force-advance the
+    stage after ``patience`` rounds) nor count toward patience or the
+    ``max_rounds_per_stage`` budget — but a run whose every round is
+    non-finite (divergence, not dropout) must still hit the budget."""
+    sch = PlateauSchedule(num_stages=3, patience=2, min_delta=1e-3,
+                          max_rounds_per_stage=6)
+    sch.observe(0, 1.0)
+    for r in range(1, 5):                     # a burst of lost rounds
+        sch.observe(r, float("nan"))
+    assert sch.stage(5) == 0                  # no force-advance
+    assert sch._best == 1.0                   # NaN never became best
+    assert sch._bad == 0                      # nor counted toward patience
+    assert sch._rounds_in_stage == 1          # nor the max-rounds budget
+    sch.observe(5, 0.9)                       # still improving
+    assert sch._best == 0.9 and sch.stage(6) == 0
+    sch.observe(6, 0.9)                       # genuine plateau still works
+    sch.observe(7, 0.9)
+    assert sch.stage(8) == 1
+
+    # divergence backstop: max_rounds_per_stage consecutive non-finite
+    # rounds (no finite round ever resets the streak) still advance, so a
+    # permanently-NaN run cannot pin its stage forever
+    div = PlateauSchedule(num_stages=2, patience=2, max_rounds_per_stage=3)
+    div.observe(0, 1.0)
+    div.observe(1, float("nan"))
+    div.observe(2, 0.8)                       # finite: streak resets
+    for r in range(3, 6):
+        div.observe(r, float("nan"))
+    assert div.stage(6) == 1
+
+
+def test_make_host_mesh_clamps_non_divisor_model_parallel():
+    from repro.launch.mesh import make_host_mesh
+    n = jax.device_count()
+    with pytest.warns(UserWarning, match="clamping"):
+        mesh = make_host_mesh(n + 1)          # over-ask: clamped + warned
+    assert mesh.shape["data"] * mesh.shape["model"] == n
+    bad = next((k for k in range(2, n) if n % k), None)
+    if bad is not None:                       # e.g. 3 on an 8-device host
+        with pytest.warns(UserWarning, match="clamping"):
+            mesh = make_host_mesh(bad)
+        assert mesh.shape["data"] * mesh.shape["model"] == n
+        assert n % mesh.shape["model"] == 0 and mesh.shape["model"] < bad
+
+
+def test_sharded_runtime_rejects_contradictory_mesh(cnn_setup):
+    """An explicit mesh whose "model" axis disagrees with model_parallel
+    must not silently run with the mesh's (e.g. replicated) sharding."""
+    from repro.launch.mesh import make_host_mesh
+    adapter, _, _ = cnn_setup
+    with pytest.raises(ValueError, match="contradicts"):
+        ShardedRuntime(adapter, sgd(0.05), CurriculumHP(),
+                       mesh=make_host_mesh(1), model_parallel=4)
+
+
+def test_async_lost_round_reports_zero_sim_time(cnn_setup):
+    """An all-dropped async round flushes nothing and never waits: it must
+    report its own (zero) virtual clock, not fall back to the server's
+    synchronous straggler wall-clock."""
+    adapter, params, batchers = cnn_setup
+    rt = AsyncBufferedRuntime(adapter, sgd(0.05), CurriculumHP(),
+                              buffer_size=2)
+    out = rt.run_round(params, 0, batchers, [0, 1], local_epochs=1,
+                       faults=[0, 0])         # every client crashes at step 0
+    assert out.round_sim_time == 0.0
+    assert out.n_uploads == 0
+    assert not np.isfinite(float(out.mean_loss))
+    _assert_trees_equal(out.params, params, rtol=0, atol=0)
 
 
 @pytest.mark.slow
