@@ -10,11 +10,16 @@ cohort batch stack (data pipeline excluded), for the paper's CNN
 
   PYTHONPATH=src python -m benchmarks.fl_round_throughput [--cohorts 16]
 
-``--runtime async`` instead reports the buffered-async (FedBuff) round on
-a virtual clock: cohorts deliver deltas at ``steps / speed`` under a
-heterogeneous device-tier speed mix, the server flushes every K arrivals,
-and the simulated round wall-clock (last flush) is compared against the
-synchronous barrier (slowest straggler).
+``--runtime async`` instead reports the stateful buffered-async (FedBuff)
+server over ``--rounds`` rounds on an absolute virtual clock: cohorts
+deliver deltas at ``steps / speed`` under a heterogeneous device-tier
+speed mix, the server flushes every K arrivals at true versions-behind
+staleness, stragglers pending at a round's close carry into the next round
+(the ``carried`` column), and the simulated wall-clock (round open to last
+flush) is compared against the synchronous barrier (slowest straggler).
+Combine with ``--model-parallel K`` to run the async local program and
+buffered flushes on the 2-D (data, model) mesh (per-device trainable
+bytes shrink ~1/K).
 
 ``--model-parallel K`` reports the 2-D (data, model) sharded round: stage
 params / optimizer state / per-cohort local weights shard K-ways over the
@@ -95,33 +100,48 @@ def bench(kind: str, num_cohorts: int = 16, batch_size: int = 4,
 
 def bench_async(kind: str, num_cohorts: int = 16, batch_size: int = 4,
                 local_steps: int = 2, stage: int = 1,
-                buffer_size: int = 0, seed: int = 0):
+                buffer_size: int = 0, seed: int = 0, rounds: int = 2,
+                model_parallel: int = 1):
     """Simulated-time speedup of buffered-async rounds vs the synchronous
-    barrier; returns a dict of the virtual-clock numbers."""
+    barrier over ``rounds`` stateful server rounds (stragglers pending at
+    one round's close carry over and flush in a later one); returns a dict
+    of the virtual-clock numbers.  ``model_parallel > 1`` runs the async
+    local training + buffered flushes on the 2-D (data, model) mesh and
+    reports per-device trainable bytes vs the replicated async path."""
     import numpy as np
     from repro.federated.devices import sample_devices
     from repro.federated.runtime import AsyncBufferedRuntime
+    from repro.launch.sharding import per_device_nbytes
 
     if buffer_size <= 0:
         buffer_size = max(1, (3 * num_cohorts) // 4)
+    rounds = max(1, int(rounds))
     adapter, params, opt, hp, stack = _setup(kind, num_cohorts, batch_size,
                                              local_steps)
     # heterogeneous fleet: device-tier speed mix (Jetson-class .. phones)
     speeds = np.asarray([d.speed for d in
                          sample_devices(seed, num_cohorts, 1)])
     sim_times = np.asarray(stack.num_batches, float) / speeds
-    sync_time = float(sim_times.max())
+    sync_time = float(sim_times.max()) * rounds
 
     runtime = AsyncBufferedRuntime(adapter, opt, hp,
-                                   buffer_size=buffer_size)
-    _, metrics = runtime.run_stacked(params, stage, stack,
-                                     sim_times=sim_times)
-    async_time = metrics["sim_round_time"]
-    return {"buffer_size": buffer_size, "sync_time": sync_time,
-            "async_time": async_time,
+                                   buffer_size=buffer_size,
+                                   model_parallel=model_parallel)
+    async_time, n_carried, n_uploads, new_tr = 0.0, 0, 0, None
+    for _ in range(rounds):
+        new_tr, metrics = runtime.run_stacked(params, stage, stack,
+                                              sim_times=sim_times)
+        async_time += metrics["sim_round_time"]
+        n_carried += metrics["n_carried"]
+        n_uploads += metrics["n_uploads"]
+    return {"buffer_size": buffer_size, "rounds": rounds,
+            "sync_time": sync_time, "async_time": async_time,
             "speedup": sync_time / max(async_time, 1e-12),
             "n_pending": metrics["n_pending"],
-            "n_flushes": int(metrics["staleness"].max()) + 1}
+            "n_carried": n_carried, "n_uploads": n_uploads,
+            "server_version": metrics["server_version"],
+            "trainable_bytes_per_device": per_device_nbytes(new_tr),
+            "model_shards": runtime.model_shards}
 
 
 def bench_model_parallel(kind: str, model_parallel: int,
@@ -183,7 +203,29 @@ def main():
                     help="report the 2-D (data, model) sharded round: "
                          "per-device trainable bytes + rounds/s vs the "
                          "replicated path")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="async: stateful server rounds (stragglers carry "
+                         "across round boundaries)")
     args = ap.parse_args()
+    if args.runtime == "async":
+        # async x sharded composition: --model-parallel K runs the async
+        # local program + buffered flushes on the 2-D (data, model) mesh
+        if args.model_parallel > 1:
+            _force_host_devices(max(8, 2 * args.model_parallel))
+        print(f"{'model':12s} {'mesh':>8s} {'K':>4s} {'ver':>4s} "
+              f"{'carried':>7s} {'pending':>7s} {'t_sync':>8s} "
+              f"{'t_async':>8s} {'speedup':>8s} {'trainB/dev':>11s}")
+        for kind in ("cnn", "transformer"):
+            r = bench_async(kind, args.cohorts, args.batch, args.steps,
+                            args.stage, args.buffer, rounds=args.rounds,
+                            model_parallel=args.model_parallel)
+            mesh = f"x{r['model_shards']}"
+            print(f"{kind:12s} {mesh:>8s} {r['buffer_size']:4d} "
+                  f"{r['server_version']:4d} {r['n_carried']:7d} "
+                  f"{r['n_pending']:7d} {r['sync_time']:8.2f} "
+                  f"{r['async_time']:8.2f} {r['speedup']:7.2f}x "
+                  f"{r['trainable_bytes_per_device']:11d}")
+        return
     if args.model_parallel > 1:
         _force_host_devices(max(8, 2 * args.model_parallel))
         print(f"{'model':12s} {'placement':>20s} {'rounds/s':>9s} "
@@ -199,16 +241,6 @@ def main():
                       f"{row['rounds_per_s']:9.2f} "
                       f"{row['trainable_bytes_per_device']:15d} "
                       f"{ratio:5.2f}x")
-        return
-    if args.runtime == "async":
-        print(f"{'model':12s} {'K':>4s} {'flushes':>7s} {'pending':>7s} "
-              f"{'t_sync':>8s} {'t_async':>8s} {'speedup':>8s}")
-        for kind in ("cnn", "transformer"):
-            r = bench_async(kind, args.cohorts, args.batch, args.steps,
-                            args.stage, args.buffer)
-            print(f"{kind:12s} {r['buffer_size']:4d} {r['n_flushes']:7d} "
-                  f"{r['n_pending']:7d} {r['sync_time']:8.2f} "
-                  f"{r['async_time']:8.2f} {r['speedup']:7.2f}x")
         return
     print(f"{'model':12s} {'backend':12s} {'rounds/s':>9s} {'speedup':>8s}")
     for kind in ("cnn", "transformer"):

@@ -19,6 +19,13 @@ from typing import List, Optional
 
 
 class StageSchedule:
+    # True when a stage can run again after the schedule moved past it
+    # (round-robin cycling).  Monotone schedules set False, which lets the
+    # async server retire pending deltas of permanently-finished stages
+    # instead of stranding them in its buffer forever.  The conservative
+    # default (True) never drops anything.
+    revisits_stages: bool = True
+
     def stage(self, round_idx: int) -> int:
         raise NotImplementedError
 
@@ -41,6 +48,7 @@ class SequentialSchedule(StageSchedule):
     stage t for rounds [t*interval, (t+1)*interval), clamped to the last."""
     num_stages: int
     rounds_per_stage: int
+    revisits_stages = False             # stages only ever advance
 
     def stage(self, round_idx: int) -> int:
         return min(round_idx // self.rounds_per_stage, self.num_stages - 1)
@@ -52,6 +60,7 @@ class PlateauSchedule(StageSchedule):
     (e.g. validation loss) stops improving by ``min_delta`` for ``patience``
     consecutive rounds; then grow to the next block."""
     num_stages: int
+    revisits_stages = False             # stages only ever advance
     patience: int = 3
     min_delta: float = 1e-3
     max_rounds_per_stage: int = 50

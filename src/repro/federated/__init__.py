@@ -1,8 +1,10 @@
-from repro.federated.aggregation import (staleness_discount,
+from repro.federated.aggregation import (buffered_flush_average,
+                                         staleness_discount,
                                          stacked_weighted_average,
                                          weighted_average)
 from repro.federated.devices import DeviceProfile, sample_devices
-from repro.federated.runtime import (AsyncBufferedRuntime, ClientRuntime,
+from repro.federated.runtime import (AsyncBufferedRuntime, AsyncServerState,
+                                     BufferEntry, ClientRuntime, Flush,
                                      RoundOutcome, SequentialRuntime,
                                      ShardedRuntime, VectorizedRuntime,
                                      make_runtime, plan_flushes)
@@ -11,9 +13,10 @@ from repro.federated.selection import (memory_feasible, oort_select,
 from repro.federated.server import FLConfig, NeuLiteServer, RoundResult
 
 __all__ = ["weighted_average", "stacked_weighted_average",
-           "staleness_discount", "DeviceProfile", "sample_devices",
+           "staleness_discount", "buffered_flush_average", "DeviceProfile",
+           "sample_devices",
            "memory_feasible", "random_select", "tifl_select", "oort_select",
            "FLConfig", "NeuLiteServer", "RoundResult", "ClientRuntime",
            "RoundOutcome", "SequentialRuntime", "VectorizedRuntime",
-           "ShardedRuntime", "AsyncBufferedRuntime", "plan_flushes",
-           "make_runtime"]
+           "ShardedRuntime", "AsyncBufferedRuntime", "AsyncServerState",
+           "BufferEntry", "Flush", "plan_flushes", "make_runtime"]

@@ -68,6 +68,33 @@ def stacked_weighted_average(tree, weights: Sequence[float],
     return jax.tree.map(avg, tree)
 
 
+def buffered_flush_average(stacked_deltas, weights: Sequence[float],
+                           staleness: Sequence[int], *,
+                           schedule: str = "polynomial",
+                           alpha: float = 0.5):
+    """One buffered-async server flush: Eq. 1 over a delta buffer whose
+    entries each carry their OWN staleness.
+
+    ``stacked_deltas`` leaves have a leading (K,) buffer axis; ``staleness``
+    is per entry — true server versions elapsed since that entry's pull, so
+    a single flush can mix a fresh delivery (s=0) with a straggler carried
+    across rounds (s>=1) at different discounts.  Funnels into the same
+    ``stacked_weighted_average`` einsum as the synchronous backends (the
+    seam to instrument for secure-agg / DP masking).
+
+    Returns ``(update, discounts)``: the discounts actually folded into the
+    update, so callers account per-entry effective weights (upload metrics,
+    loss weighting) with exactly the factors the parameters saw — computed
+    once, no drift between the update and its bookkeeping.
+    """
+    d = staleness_discount(staleness, schedule, alpha)
+    w = list(weights)
+    if len(d) != len(w):
+        raise ValueError(f"{len(w)} weights for "
+                         f"{len(d)} staleness entries")
+    return stacked_weighted_average(stacked_deltas, w, discounts=d), d
+
+
 def weighted_average(trees: Sequence, weights: Sequence[float]):
     """FedAvg over a list of per-client trees (stacks, then one einsum)."""
     return stacked_weighted_average(

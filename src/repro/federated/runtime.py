@@ -21,11 +21,17 @@ those identical semantics at different points on the throughput curve:
                          ParamDef specs (``launch.sharding``), so clients
                          whose trainable block does not fit one device
                          still train.
-  AsyncBufferedRuntime — FedBuff-style buffered aggregation on a virtual
-                         clock: clients deliver deltas at their own
-                         simulated pace, the server flushes every K arrivals
-                         with staleness-discounted Eq. 1 weights and never
-                         waits for stragglers (see the class docstring).
+  AsyncBufferedRuntime — a stateful FedBuff-style buffered-async server on
+                         a virtual clock: clients deliver deltas at their
+                         own simulated pace, the server flushes every K
+                         arrivals with per-entry staleness-discounted Eq. 1
+                         weights, and stragglers stay in a persistent
+                         ``AsyncServerState`` buffer that carries them into
+                         later ``run_round`` calls — no delivered delta is
+                         ever dropped (see the class docstring).  With
+                         ``model_parallel > 1`` its local training and
+                         flush aggregation run on the same 2-D mesh
+                         placements as ``ShardedRuntime``.
 
 All backends consume a ``RoundStack`` (``data.loader.stack_round``): a
 (C, E, ...) batch stack plus a (C, E) step mask.  The mask preserves the
@@ -349,6 +355,18 @@ class SequentialRuntime(ClientRuntime):
             losses.append(res.mean_loss)
             num_batches.append(res.num_batches)
             num_samples.append(res.num_samples)
+        if float(np.sum(num_samples)) <= 0:
+            # zero total aggregation weight = the documented lost round
+            # (params unchanged, NaN loss) — the same outcome the base-class
+            # stacked path produces, instead of a ValueError from
+            # stacked_weighted_average / a 0/0 in the loss weights
+            return RoundOutcome(
+                params=params, trainable=trainable,
+                mean_loss=jnp.asarray(float("nan")),
+                cohort_losses=jnp.zeros(len(cohorts)),
+                num_batches=num_batches,
+                num_samples=[float(n) for n in num_samples],
+                n_uploads=0)
         new_trainable = agg.weighted_average(results, num_samples)
         cohort_losses = jnp.stack([jnp.asarray(l) for l in losses])
         w = np.asarray(num_samples, np.float32)
@@ -389,6 +407,92 @@ class VectorizedRuntime(ClientRuntime):
         return self._program(t)(trainable, frozen, batches, weights, mask)
 
 
+# =========================================================================== #
+# shared 2-D (data, model) mesh plumbing — used by the sharded and async
+# backends so both place round inputs/outputs identically
+# =========================================================================== #
+def resolve_round_mesh(mesh, model_parallel: int, model_axis: str = "model"):
+    """Build (``make_host_mesh``) or validate an explicit round mesh.
+
+    An explicit mesh whose ``model_axis`` size contradicts ``model_parallel``
+    is rejected — it would silently run with the mesh's sharding, not the
+    request."""
+    if mesh is None:
+        from repro.launch.mesh import make_host_mesh
+        return make_host_mesh(model_parallel)
+    if (model_parallel != 1
+            and dict(mesh.shape).get(model_axis, 1) != model_parallel):
+        raise ValueError(
+            f"model_parallel={model_parallel} contradicts the explicit "
+            f"mesh (shape {dict(mesh.shape)}): pass one or the other "
+            f"— a mesh whose '{model_axis}' axis disagrees would "
+            f"silently run with the mesh's sharding, not the request")
+    return mesh
+
+
+class StagePlacements:
+    """Cached per-stage NamedSharding placements on a (data, model) mesh.
+
+    One instance per runtime: ``placements(t)`` returns the
+    ``(trainable, frozen, cohort-axis)`` shardings for stage ``t`` (fitted
+    from the adapter's logical ParamDef specs), and ``place_inputs``
+    commits a round's inputs to them — params/optimizer seeds onto the
+    model axis, the cohort stack onto the data axis (batch leaves via
+    ``batch_spec``)."""
+
+    def __init__(self, adapter: Adapter, mesh, axis: str = "data"):
+        self.adapter = adapter
+        self.mesh = mesh
+        self.axis = axis
+        self._cache: Dict[int, Any] = {}
+
+    def placements(self, t: int):
+        if t not in self._cache:
+            from repro.launch.sharding import cohort_sharding, tree_shardings
+            frozen_defs, trainable_defs = self.adapter.split_stage(
+                self.adapter.defs, t)
+            self._cache[t] = (tree_shardings(trainable_defs, self.mesh),
+                              tree_shardings(frozen_defs, self.mesh),
+                              cohort_sharding(self.mesh, self.axis))
+        return self._cache[t]
+
+    def stacked_locals(self, t: int):
+        """Shardings for per-cohort local weights: (C, *param) leaves place
+        as P(data, *model_spec)."""
+        from repro.launch.sharding import stacked_tree_shardings
+        return stacked_tree_shardings(
+            self.adapter.split_stage(self.adapter.defs, t)[1],
+            self.mesh, self.axis)
+
+    def place_inputs(self, t, trainable, frozen, batches, weights, mask):
+        from jax.sharding import NamedSharding
+        from repro.launch.sharding import batch_spec
+        tr_sh, fr_sh, cohort_sh = self.placements(t)
+        batches = jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(
+                self.mesh, batch_spec(x.shape, self.mesh))), batches)
+        weights = (None if weights is None
+                   else jax.device_put(weights, cohort_sh))
+        return (jax.device_put(trainable, tr_sh),
+                jax.device_put(frozen, fr_sh), batches, weights,
+                jax.device_put(mask, cohort_sh))
+
+
+def pad_cohorts(batches, weights, mask, shards: int):
+    """Pad the cohort axis to a multiple of the data-axis size with
+    zero-weight, fully-masked cohorts (exact no-ops on every path)."""
+    C = weights.shape[0]
+    pad = (-C) % shards
+    if pad:
+        batches = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)]), batches)
+        weights = jnp.concatenate([weights, jnp.zeros(pad, weights.dtype)])
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((pad, mask.shape[1]), bool)])
+    return batches, weights, mask
+
+
 class ShardedRuntime(VectorizedRuntime):
     """The vectorized program over a 2-D ``(data, model)`` launch mesh.
 
@@ -421,20 +525,10 @@ class ShardedRuntime(VectorizedRuntime):
                  axis: str = "data", model_axis: str = "model",
                  model_parallel: int = 1):
         super().__init__(adapter, optimizer, hp)
-        if mesh is None:
-            from repro.launch.mesh import make_host_mesh
-            mesh = make_host_mesh(model_parallel)
-        elif (model_parallel != 1
-              and dict(mesh.shape).get(model_axis, 1) != model_parallel):
-            raise ValueError(
-                f"model_parallel={model_parallel} contradicts the explicit "
-                f"mesh (shape {dict(mesh.shape)}): pass one or the other "
-                f"— a mesh whose '{model_axis}' axis disagrees would "
-                f"silently run with the mesh's sharding, not the request")
-        self.mesh = mesh
+        self.mesh = resolve_round_mesh(mesh, model_parallel, model_axis)
         self.axis = axis
         self.model_axis = model_axis
-        self._placements: Dict[int, Any] = {}
+        self._place = StagePlacements(adapter, self.mesh, axis)
 
     @property
     def _shards(self) -> int:
@@ -473,66 +567,26 @@ class ShardedRuntime(VectorizedRuntime):
 
     def _build_2d(self, t: int):
         """Model-sharded path: GSPMD over the (data, model) mesh."""
-        from repro.launch.sharding import stacked_tree_shardings
-        locals_sh = stacked_tree_shardings(
-            self.adapter.split_stage(self.adapter.defs, t)[1],
-            self.mesh, self.axis)
         return make_round_program(self.adapter, self.optimizer, self.hp, t,
-                                  locals_shardings=locals_sh)
-
-    def _stage_placements(self, t: int):
-        """(trainable, frozen, cohort-axis) NamedShardings for stage t."""
-        if t not in self._placements:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            from repro.launch.sharding import tree_shardings
-            frozen_defs, trainable_defs = self.adapter.split_stage(
-                self.adapter.defs, t)
-            self._placements[t] = (tree_shardings(trainable_defs, self.mesh),
-                                   tree_shardings(frozen_defs, self.mesh),
-                                   NamedSharding(self.mesh, P(self.axis)))
-        return self._placements[t]
+                                  locals_shardings=self._place.stacked_locals(t))
 
     def _out_sh(self, t: int):
         from repro.launch.sharding import replicated
-        tr_sh, _, cohort_sh = self._stage_placements(t)
+        tr_sh, _, cohort_sh = self._place.placements(t)
         return (tr_sh, {"mean_local_loss": replicated(self.mesh),
                         "cohort_losses": cohort_sh})
 
     def _device_stack(self, stack: RoundStack):
         batches, weights, mask = super()._device_stack(stack)
-        C = weights.shape[0]
-        pad = (-C) % self._shards
-        if pad:
-            batches = jax.tree.map(
-                lambda x: jnp.concatenate(
-                    [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)]), batches)
-            weights = jnp.concatenate([weights, jnp.zeros(pad,
-                                                          weights.dtype)])
-            mask = jnp.concatenate(
-                [mask, jnp.zeros((pad, mask.shape[1]), bool)])
-        return batches, weights, mask
-
-    def _place_2d(self, t, trainable, frozen, batches, weights, mask):
-        """Commit round inputs to their 2-D placements before the call:
-        params/optimizer state onto the model axis, the cohort stack onto
-        the data axis (the batch leaves via ``batch_spec``)."""
-        from jax.sharding import NamedSharding
-        from repro.launch.sharding import batch_spec
-        tr_sh, fr_sh, cohort_sh = self._stage_placements(t)
-        batches = jax.tree.map(
-            lambda x: jax.device_put(x, NamedSharding(
-                self.mesh, batch_spec(x.shape, self.mesh))), batches)
-        return (jax.device_put(trainable, tr_sh),
-                jax.device_put(frozen, fr_sh), batches,
-                jax.device_put(weights, cohort_sh),
-                jax.device_put(mask, cohort_sh))
+        return pad_cohorts(batches, weights, mask, self._shards)
 
     def _run_stack(self, t, trainable, frozen, stack: RoundStack):
         batches, weights, mask = self._device_stack(stack)
         program = self._program(t)
         if self.model_shards > 1:
-            trainable, frozen, batches, weights, mask = self._place_2d(
-                t, trainable, frozen, batches, weights, mask)
+            trainable, frozen, batches, weights, mask = \
+                self._place.place_inputs(t, trainable, frozen, batches,
+                                         weights, mask)
         new_trainable, metrics = program(trainable, frozen, batches,
                                          weights, mask)
         C = stack.num_cohorts
@@ -546,18 +600,20 @@ class ShardedRuntime(VectorizedRuntime):
 # =========================================================================== #
 @dataclasses.dataclass
 class FlushPlan:
-    """Virtual-clock schedule for one buffered-async round.
+    """Arrival-order schedule for buffered-async flushes.
 
-    flushes    : cohort-index arrays, one per server flush, in arrival order
-    staleness  : (C,) int — server updates between a cohort pulling params
-                 and its delta aggregating (flush index); -1 = left pending
-    pending    : cohorts still in the buffer when the round closes (their
-                 deltas are dropped by the one-shot simulation)
-    round_time : simulated wall-clock of the last flush — the async round
-                 ends there, not at the slowest straggler
+    flushes    : delivery-index arrays, one per server flush, in arrival
+                 order (staleness is NOT planned here — it is true
+                 versions-behind, computed per entry at flush time by
+                 ``AsyncServerState.schedule``)
+    pending    : deliveries still in the buffer when the round closes; they
+                 stay in the server's persistent buffer and flush in a
+                 later round
+    round_time : simulated wall-clock of the last flush (0.0 when nothing
+                 flushed) — the async round ends there, not at the slowest
+                 straggler
     """
     flushes: List[np.ndarray]
-    staleness: np.ndarray
     pending: np.ndarray
     round_time: float
 
@@ -565,10 +621,13 @@ class FlushPlan:
 def plan_flushes(sim_times: Sequence[float], buffer_size: int) -> FlushPlan:
     """Schedule FedBuff flushes on a virtual clock.
 
-    Cohorts arrive at ``sim_times``; the server flushes its buffer every
-    ``buffer_size`` arrivals (0 means "the whole cohort" — one synchronous
-    flush).  Arrivals after the last full buffer stay pending.  Ties break
-    by cohort index (stable sort) so the plan is deterministic.
+    Deliveries arrive at ``sim_times``; the server flushes its buffer every
+    ``buffer_size`` arrivals (0 means "everything delivered" — one
+    synchronous flush).  Arrivals after the last full buffer stay pending —
+    with fewer than ``buffer_size`` arrivals nothing flushes at all (the
+    persistent buffer carries them into the next round; the old one-shot
+    simulation clamped K to the arrival count and force-flushed).  Ties
+    break by position (stable sort) so the plan is deterministic.
     """
     t = np.asarray(sim_times, np.float64)
     if t.ndim != 1 or t.size == 0:
@@ -578,35 +637,168 @@ def plan_flushes(sim_times: Sequence[float], buffer_size: int) -> FlushPlan:
         raise ValueError(f"negative sim_time {t.min()}")
     order = np.argsort(t, kind="stable")
     C = t.size
-    K = C if buffer_size <= 0 else min(int(buffer_size), C)
+    K = C if buffer_size <= 0 else int(buffer_size)
     n_full = C // K
     flushes = [order[j * K:(j + 1) * K] for j in range(n_full)]
     pending = order[n_full * K:]
-    staleness = np.full(C, -1, int)
-    for j, idx in enumerate(flushes):
-        staleness[idx] = j
-    return FlushPlan(flushes=flushes, staleness=staleness, pending=pending,
-                     round_time=float(t[flushes[-1][-1]]))
+    round_time = float(t[flushes[-1][-1]]) if flushes else 0.0
+    return FlushPlan(flushes=flushes, pending=pending,
+                     round_time=round_time)
+
+
+@dataclasses.dataclass
+class BufferEntry:
+    """One delivered-but-unflushed client delta in the async server buffer.
+
+    The delta survives round boundaries: it is aggregated (exactly once)
+    when its flush comes, however many rounds later that is.
+    """
+    delta: Any            # f32 trainable-subtree delta vs pull-time params
+    weight: float         # Eq. 1 sample weight (completed-step scaled)
+    loss: Any             # client mean local loss (0-d device array)
+    pulled_version: int   # server version when the client pulled params
+    arrival_time: float   # ABSOLUTE virtual-clock delivery time
+    stage: int            # progressive stage the delta trains
+    cohort: int           # cohort index within its round (diagnostics)
+
+
+@dataclasses.dataclass
+class Flush:
+    """One server flush: the entries it aggregates, their true staleness
+    (server versions elapsed since each entry's pull — entries in the SAME
+    flush can differ), the server version the flush updates, and its
+    absolute virtual time."""
+    entries: List[BufferEntry]
+    staleness: np.ndarray
+    version: int
+    time: float
+
+
+class AsyncServerState:
+    """Host-side cross-round state of the buffered-async server.
+
+    entries : deliveries waiting for a flush — they persist across
+              ``run_round`` calls instead of being dropped at round close
+    version : monotonically increasing server parameter version; one bump
+              per flush.  True staleness of an entry at flush time is
+              ``version - entry.pulled_version`` (versions-behind, not the
+              old flush-index proxy).
+    clock   : absolute virtual time of the last flush (rounds are open
+              intervals on this clock; new pulls happen at ``clock``)
+    """
+
+    def __init__(self):
+        self.entries: List[BufferEntry] = []
+        self.version: int = 0
+        self.clock: float = 0.0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def evict_stale(self, max_staleness: Optional[int]) -> List[BufferEntry]:
+        """Drop (and return) entries more than ``max_staleness`` server
+        versions behind — the only way a delivered delta ever leaves the
+        buffer unaggregated, and only when the cap is explicitly set.
+
+        The cap is enforced at ROUND OPEN, against the version at that
+        moment: an entry that survives it can still aggregate a few
+        versions past the cap if earlier flushes of its own round bump the
+        version first (bounded by that round's flush count, and the
+        staleness discount keeps shrinking it) — it just cannot linger into
+        the next round."""
+        if max_staleness is None:
+            return []
+        keep, evicted = [], []
+        for e in self.entries:
+            dest = (evicted if self.version - e.pulled_version
+                    > max_staleness else keep)
+            dest.append(e)
+        self.entries = keep
+        return evicted
+
+    def drop_retired_stages(self, current_stage: int) -> List[BufferEntry]:
+        """Drop (and return) pending entries of stages BEFORE
+        ``current_stage``.
+
+        Only valid under a monotone stage schedule (``revisits_stages``
+        False — sequential / plateau): a stage the schedule moved past will
+        never train again, so its pending deltas are permanently
+        unusable — without this they would sit in the buffer (and hold
+        their device arrays) for the rest of the run.  Round-robin
+        schedules revisit stages and must NOT call this."""
+        keep = [e for e in self.entries if e.stage >= current_stage]
+        dropped = [e for e in self.entries if e.stage < current_stage]
+        self.entries = keep
+        return dropped
+
+    def schedule(self, new_entries: Sequence[BufferEntry], buffer_size: int,
+                 stage: int) -> List[Flush]:
+        """Admit this round's deliveries and plan its flushes.
+
+        Pending entries of the SAME stage merge with the new arrivals in
+        delivery order; entries of other stages stay buffered untouched
+        (their trainable subtree does not exist in this round — they flush
+        when their stage next runs).  Every flush bumps ``version``; per-
+        entry staleness is the version gap at that moment, so one flush can
+        mix fresh deliveries with multi-round-old stragglers at different
+        discounts.  Flushed entries leave the buffer; leftovers stay.
+        """
+        eligible = [e for e in self.entries if e.stage == stage]
+        held = [e for e in self.entries if e.stage != stage]
+        eligible.extend(new_entries)
+        if not eligible:
+            return []
+        plan = plan_flushes([e.arrival_time for e in eligible], buffer_size)
+        flushes = []
+        for idx in plan.flushes:
+            group = [eligible[i] for i in idx]
+            staleness = np.asarray(
+                [self.version - e.pulled_version for e in group], int)
+            flushes.append(Flush(entries=group, staleness=staleness,
+                                 version=self.version,
+                                 time=float(group[-1].arrival_time)))
+            self.version += 1
+        self.entries = held + [eligible[i] for i in plan.pending]
+        if flushes:
+            self.clock = max(self.clock, flushes[-1].time)
+        return flushes
 
 
 class AsyncBufferedRuntime(ClientRuntime):
-    """FedBuff-style buffered-async rounds on a simulated clock.
+    """Stateful FedBuff-style buffered-async server on a simulated clock.
 
-    All cohorts pull the round's params at virtual time 0 and deliver their
-    deltas at ``num_batches / speed``.  The server flushes every K arrivals
-    (``buffer_size``; 0 = cohort size): flush j applies the sample-weighted
-    buffer-average delta scaled by ``server_lr`` and the staleness discount
-    d(j) (``aggregation.staleness_discount`` — flush j's deltas were
-    computed j server versions ago).  Stragglers past the last full buffer
-    stay pending and are dropped — the round's simulated wall-clock is the
-    last *flush*, which is where the async speedup over the synchronous
-    barrier comes from.  Zero-weight cohorts (clients that crashed before
+    Each ``run_round`` call opens at the server's current virtual clock and
+    version: selected cohorts pull the round's params (stamping
+    ``pulled_version``) and deliver their deltas ``num_batches / speed``
+    later on the absolute clock.  The server flushes every K deliveries
+    (``buffer_size``; 0 = everything delivered this round): a flush
+    aggregates the sample-weighted buffer deltas scaled by ``server_lr``
+    and each entry's OWN staleness discount — staleness is true
+    versions-behind (``server_version - pulled_version``), so a flush can
+    mix a fresh delivery with a straggler pulled several rounds (and
+    server versions) ago.  Every flush bumps the server version.
+
+    Deliveries past the last full buffer stay **pending in the persistent
+    ``AsyncServerState`` buffer and aggregate in a later round** — the
+    one-shot simulation used to drop them, systematically biasing Eq. 1
+    toward fast clients.  The round's simulated wall-clock is the span from
+    round open to the last flush (0 when nothing flushed); the async
+    speedup over the synchronous barrier comes from never waiting for the
+    straggler tail.  Zero-weight cohorts (clients that crashed before
     completing a single step) never deliver: they take no buffer slot and
-    consume no staleness level.
+    consume no staleness level.  Pending entries whose progressive stage
+    differs from the current round's stay buffered until their stage runs
+    again (``max_staleness`` evicts entries more than that many versions
+    behind — the only sanctioned drop, off by default).
 
-    With K = cohort size and a constant (or any) discount at staleness 0,
-    the single flush reproduces the synchronous ``VectorizedRuntime`` round
-    (base + sum of weight-normalized deltas == the Eq. 1 average).
+    On a fresh server with K = cohort size, the single flush at staleness 0
+    reproduces the synchronous ``VectorizedRuntime`` round (base + sum of
+    weight-normalized deltas == the Eq. 1 average).  With
+    ``model_parallel > 1`` local training runs under GSPMD on the same
+    (data, model) mesh placements as ``ShardedRuntime`` — per-cohort local
+    weights shard ``P(data, *model_spec)`` and buffered flush aggregation
+    inherits the model sharding, so per-device trainable bytes shrink by
+    ~1/k exactly as on the synchronous 2-D path.
     """
 
     name = "async"
@@ -614,7 +806,10 @@ class AsyncBufferedRuntime(ClientRuntime):
     def __init__(self, adapter, optimizer, hp, *, buffer_size: int = 0,
                  staleness_schedule: str = "polynomial",
                  staleness_alpha: float = 0.5, server_lr: float = 1.0,
-                 client_speeds: Optional[Dict[int, float]] = None):
+                 client_speeds: Optional[Dict[int, float]] = None,
+                 max_staleness: Optional[int] = None,
+                 mesh=None, model_parallel: int = 1, axis: str = "data",
+                 model_axis: str = "model"):
         super().__init__(adapter, optimizer, hp)
         agg.staleness_discount(np.zeros(1), staleness_schedule,
                                staleness_alpha)    # validate eagerly
@@ -623,19 +818,48 @@ class AsyncBufferedRuntime(ClientRuntime):
         self.staleness_alpha = float(staleness_alpha)
         self.server_lr = float(server_lr)
         self.client_speeds = client_speeds
+        self.max_staleness = (None if max_staleness is None
+                              else int(max_staleness))
+        self.axis = axis
+        self.model_axis = model_axis
+        if mesh is not None or model_parallel != 1:
+            self.mesh = resolve_round_mesh(mesh, model_parallel, model_axis)
+            self._place = StagePlacements(adapter, self.mesh, axis)
+        else:
+            self.mesh = None
+            self._place = None
+        self.state = AsyncServerState()
+
+    @property
+    def model_shards(self) -> int:
+        return (1 if self.mesh is None
+                else dict(self.mesh.shape).get(self.model_axis, 1))
+
+    def reset_state(self):
+        """Fresh server: empty buffer, version 0, clock 0."""
+        self.state = AsyncServerState()
 
     def _program(self, t: int):
         if t not in self._programs:
             from repro.core.progressive import donation_supported
-            self._programs[t] = jax.jit(
-                make_local_program(self.adapter, self.optimizer, self.hp, t),
-                donate_argnums=(2,) if donation_supported() else ())
+            donate = (2,) if donation_supported() else ()
+            local_fn = make_local_program(self.adapter, self.optimizer,
+                                          self.hp, t)
+            if self.mesh is not None:
+                # GSPMD: same placements as the sharded backend's 2-D round
+                _, _, cohort_sh = self._place.placements(t)
+                self._programs[t] = jax.jit(
+                    local_fn,
+                    out_shardings=(self._place.stacked_locals(t), cohort_sh),
+                    donate_argnums=donate)
+            else:
+                self._programs[t] = jax.jit(local_fn, donate_argnums=donate)
         return self._programs[t]
 
     def cohort_sim_times(self, stack: RoundStack,
                          cohorts: Optional[Sequence[int]] = None
                          ) -> np.ndarray:
-        """Simulated delivery times: completed steps / client speed."""
+        """Simulated delivery durations: completed steps / client speed."""
         steps = np.asarray(stack.num_batches, np.float64)
         if self.client_speeds is None or cohorts is None:
             return steps
@@ -647,9 +871,13 @@ class AsyncBufferedRuntime(ClientRuntime):
                     sim_times: Optional[Sequence[float]] = None):
         """One buffered-async round on a prepared stack.
 
-        ``sim_times`` defaults to the per-cohort true step counts (unit
+        Stateful: advances the server's persistent buffer/version/clock
+        (``reset_state`` for a fresh server).  ``sim_times`` are per-cohort
+        delivery DURATIONS from round open (default: true step counts, unit
         speed).  Metrics add the virtual-clock fields: ``staleness`` (per
-        cohort, -1 = pending), ``n_pending``, and ``sim_round_time``.
+        cohort of THIS round's stack, -1 = pending or crashed),
+        ``n_pending``, ``n_carried``, ``n_evicted``, ``server_version``,
+        and ``sim_round_time``.
         """
         if float(np.sum(stack.weights)) <= 0:
             raise ValueError("round has zero total aggregation weight")
@@ -657,58 +885,124 @@ class AsyncBufferedRuntime(ClientRuntime):
         return self._run_stack(t, trainable, frozen, stack,
                                sim_times=sim_times)
 
-    def _run_stack(self, t, trainable, frozen, stack: RoundStack, *,
-                   sim_times=None):
+    def _local_training(self, t, trainable, frozen, stack: RoundStack):
+        """Run the cohort-vmapped local program; returns (trainable as
+        placed, (C,) locals stack, (C,) losses) with any mesh padding
+        already stripped from the metrics axis."""
         batches = jax.tree.map(jnp.asarray, stack.batches)
         mask = jnp.asarray(stack.step_mask)
+        if self.mesh is not None:
+            batches, _, mask = pad_cohorts(
+                batches, jnp.asarray(stack.weights), mask,
+                self.mesh.shape[self.axis])
+            trainable, frozen, batches, _, mask = self._place.place_inputs(
+                t, trainable, frozen, batches, None, mask)
         locals_, losses = self._program(t)(trainable, frozen, batches, mask)
+        return trainable, locals_, losses
 
+    def _run_stack(self, t, trainable, frozen, stack: RoundStack, *,
+                   sim_times=None):
+        C = stack.num_cohorts
         weights = np.asarray(stack.weights, np.float64)
         times = np.asarray(self.cohort_sim_times(stack)
                            if sim_times is None else sim_times, np.float64)
+        trainable, locals_, losses = self._local_training(
+            t, trainable, frozen, stack)
+
+        # deltas against the pull-time params, accumulated in f32; on a
+        # mesh they inherit the P(data, *model_spec) placement of locals_
+        deltas = jax.tree.map(
+            lambda loc, base: loc.astype(jnp.float32)
+            - base.astype(jnp.float32), locals_, trainable)
         # cohorts that crashed before completing one step never deliver —
         # they must not occupy buffer slots, displace real updates, or
         # consume staleness levels (consistent with n_uploads accounting)
         active = np.flatnonzero(weights > 0)
-        plan = plan_flushes(times[active], self.buffer_size)
-        # deltas against the round's base params, accumulated in f32; the
-        # per-flush contraction is the same Eq. 1 stacked einsum as the
-        # synchronous backends
-        deltas = jax.tree.map(
-            lambda loc, base: loc.astype(jnp.float32)
-            - base.astype(jnp.float32), locals_, trainable)
+        round_open = self.state.clock
+        pulled = self.state.version
+        evicted = self.state.evict_stale(self.max_staleness)
+        # this round's deliveries enter the buffer WITHOUT a standalone
+        # delta copy (delta=None): flushes below read the stacked ``deltas``
+        # array directly (one gather per flush, not one slice per cohort);
+        # only the pending tail that survives the round materializes its own
+        # slice, since ``deltas`` dies with this call
+        new_entries = [
+            BufferEntry(
+                delta=None, weight=float(weights[i]), loss=losses[i],
+                pulled_version=pulled,
+                arrival_time=round_open + float(times[i]),
+                stage=t, cohort=int(i))
+            for i in active]
+        new_ids = {id(e) for e in new_entries}
+        flushes = self.state.schedule(new_entries, self.buffer_size, t)
+        for e in self.state.entries:
+            if e.delta is None:               # this round's pending tail
+                e.delta = jax.tree.map(lambda x, i=e.cohort: x[i], deltas)
+
         new_tr = jax.tree.map(lambda b: b.astype(jnp.float32), trainable)
-        # the plan already assigned per-delivery staleness (flush index);
-        # scatter it back to full cohort indexing rather than recomputing
-        staleness = np.full(len(weights), -1, int)
-        staleness[active] = plan.staleness
-        for j, f in enumerate(plan.flushes):
-            idx = active[f]
-            d = agg.staleness_discount(np.full(len(idx), j),
-                                       self.staleness_schedule,
-                                       self.staleness_alpha)
-            update = agg.stacked_weighted_average(
-                jax.tree.map(lambda d_: d_[idx], deltas), weights[idx],
-                discounts=d)
+        staleness = np.full(C, -1, int)
+        eff_w, flushed_losses, n_flushed, n_carried = [], [], 0, 0
+        for fl in flushes:
+            # per-entry discounts over heterogeneous staleness: one flush
+            # can mix fresh deliveries (read from the stacked deltas in one
+            # gather) with multi-round carried stragglers (their own
+            # copies); Eq. 1 commutes, so the fresh-then-carried order only
+            # reassociates float sums
+            pairs = list(zip(fl.entries, fl.staleness))
+            fresh = [(e, s) for e, s in pairs if id(e) in new_ids]
+            carried = [(e, s) for e, s in pairs if id(e) not in new_ids]
+            parts = []
+            if fresh:
+                pos = np.asarray([e.cohort for e, _ in fresh])
+                parts.append(jax.tree.map(lambda x: x[pos], deltas))
+            if carried:
+                parts.append(jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[e.delta for e, _ in carried]))
+            stacked = parts[0] if len(parts) == 1 else jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), *parts)
+            ordered = fresh + carried
+            update, d = agg.buffered_flush_average(
+                stacked, [e.weight for e, _ in ordered],
+                [s for _, s in ordered],
+                schedule=self.staleness_schedule,
+                alpha=self.staleness_alpha)
             new_tr = jax.tree.map(
                 lambda b, u: b + self.server_lr * u.astype(jnp.float32),
                 new_tr, update)
+            for (e, s), di in zip(ordered, d):
+                n_flushed += 1
+                n_carried += id(e) not in new_ids
+                if id(e) in new_ids:
+                    staleness[e.cohort] = int(s)
+                eff_w.append(e.weight * float(di))
+                flushed_losses.append(e.loss)
         new_trainable = jax.tree.map(lambda b, ref: b.astype(ref.dtype),
                                      new_tr, trainable)
+        if self.mesh is not None:
+            # the aggregate must keep the model-sharded placement the
+            # synchronous 2-D path guarantees (per-device bytes ~1/k)
+            new_trainable = jax.device_put(
+                new_trainable, self._place.placements(t)[0])
 
-        agg_idx = active[np.concatenate(plan.flushes)]
-        eff = weights[agg_idx] * agg.staleness_discount(
-            staleness[agg_idx], self.staleness_schedule,
-            self.staleness_alpha)
-        w = jnp.asarray(eff / eff.sum(), jnp.float32)
-        mean_loss = (losses[jnp.asarray(agg_idx)] * w).sum()
+        if n_flushed:
+            w = jnp.asarray(np.asarray(eff_w) / np.sum(eff_w), jnp.float32)
+            mean_loss = (jnp.stack(flushed_losses) * w).sum()
+        else:
+            # deliveries buffered but nothing flushed: no aggregation
+            # happened this round (params unchanged, nothing to average)
+            mean_loss = jnp.asarray(float("nan"))
         return new_trainable, {
             "mean_local_loss": mean_loss,
-            "cohort_losses": losses,
+            "cohort_losses": losses[:C],
             "staleness": staleness,
-            "n_pending": int(plan.pending.size),
-            "n_uploads": int(agg_idx.size),
-            "sim_round_time": plan.round_time}
+            "n_pending": len(self.state),
+            "n_uploads": n_flushed,
+            "n_carried": n_carried,
+            "n_evicted": len(evicted),
+            "server_version": self.state.version,
+            "sim_round_time": (max(0.0, flushes[-1].time - round_open)
+                               if flushes else 0.0)}
 
     def _round_from_stack(self, params, t, stack, cohorts):
         sim_times = self.cohort_sim_times(stack, cohorts)
@@ -738,8 +1032,16 @@ def make_runtime(spec: Union[str, ClientRuntime], adapter: Adapter,
                  optimizer, hp: CurriculumHP, **kwargs) -> ClientRuntime:
     """Resolve a runtime name ("sequential" | "vectorized" | "sharded" |
     "async") or pass an already-constructed ClientRuntime through
-    unchanged."""
+    unchanged (constructor kwargs cannot apply to an instance — passing
+    both is an error, not a silent drop)."""
     if isinstance(spec, ClientRuntime):
+        if kwargs:
+            raise ValueError(
+                f"make_runtime got an already-constructed "
+                f"{type(spec).__name__} AND constructor kwargs "
+                f"{sorted(kwargs)} — those would be silently ignored; "
+                f"configure the instance directly or pass the runtime "
+                f"name instead")
         return spec
     try:
         cls = RUNTIMES[spec]

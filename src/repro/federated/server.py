@@ -62,16 +62,23 @@ class FLConfig:
     seed: int = 0
     runtime: str = "sequential"         # sequential | vectorized | sharded
                                         # | async
-    # --- 2-D sharded rounds; used when runtime == "sharded" ---
+    # --- 2-D rounds; used when runtime is "sharded" or "async" ---
     model_parallel: int = 1             # "model"-axis size of the host mesh
                                         # (1 = replicate params, shard only
                                         # the cohort axis)
     # --- buffered-async (FedBuff) rounds; used when runtime == "async" ---
     buffer_size: int = 0                # server flushes every K deliveries
-                                        # (0 = cohort size: synchronous)
+                                        # (0 = everything delivered this
+                                        # round: synchronous); deliveries
+                                        # short of K stay buffered and
+                                        # flush in a later round
     staleness_schedule: str = "polynomial"   # constant | polynomial
     staleness_alpha: float = 0.5        # d(s) = (1+s)^-alpha
     server_lr: float = 1.0              # scale on each flushed buffer delta
+    max_staleness: Optional[int] = None  # evict buffered deltas more than
+                                         # this many server versions behind,
+                                         # checked at each round open (None
+                                         # = never drop a delivery)
     # --- mid-round client dropout / fault injection (any runtime) ---
     dropout_schedule: str = "none"      # none | constant | ramp
     dropout_rate: float = 0.0           # per-client fault probability
@@ -87,6 +94,9 @@ class RoundResult:
     upload_bytes: int
     sim_time: float
     test_acc: Optional[float] = None
+    server_version: Optional[int] = None   # async: monotone server param
+                                           # version after this round (one
+                                           # bump per buffer flush)
 
 
 class NeuLiteServer:
@@ -108,7 +118,9 @@ class NeuLiteServer:
             rt_kwargs = dict(buffer_size=flc.buffer_size,
                              staleness_schedule=flc.staleness_schedule,
                              staleness_alpha=flc.staleness_alpha,
-                             server_lr=flc.server_lr)
+                             server_lr=flc.server_lr,
+                             max_staleness=flc.max_staleness,
+                             model_parallel=flc.model_parallel)
         elif spec == "sharded":
             rt_kwargs = dict(model_parallel=flc.model_parallel)
         self.runtime = make_runtime(spec, adapter, self.optimizer, self.hp,
@@ -151,6 +163,13 @@ class NeuLiteServer:
     def run_round(self, r: int) -> RoundResult:
         flc = self.flc
         t = self.schedule.stage(r)
+        state = getattr(self.runtime, "state", None)
+        if state is not None and not getattr(self.schedule,
+                                             "revisits_stages", True):
+            # monotone schedule: stages before t never train again, so
+            # their pending async deltas are permanently unusable — retire
+            # them instead of stranding them in the buffer for the run
+            state.drop_retired_stages(t)
         req = self.stage_mem_requirement(t)
         feasible = memory_feasible(self.devices, req)
         selected = random_select(self.rng, feasible, flc.clients_per_round)
@@ -167,15 +186,19 @@ class NeuLiteServer:
                                          selected, flc.local_epochs,
                                          faults=faults)
             self.params = out.params
-            # count only clients that actually delivered a counted update —
-            # step-0 crashes and async pending stragglers upload nothing
+            # count only updates the server actually aggregated this round:
+            # step-0 crashes never upload, and an async delivery is charged
+            # in the round its flush lands — a straggler pending at round r
+            # that flushes at round r+k counts once, at r+k, never twice
+            # and never zero times
             n_up = (out.n_uploads if out.n_uploads is not None
                     else len(selected))
             upload = agg.tree_bytes(out.trainable) * n_up
             mean_loss = float(out.mean_loss)     # the round's one host sync
             if out.round_sim_time is not None:
-                # async: the round closes at the last buffer flush, not at
-                # the slowest straggler
+                # async: the round spans from open to its last buffer flush
+                # on the server's ABSOLUTE virtual clock (0 when deliveries
+                # only buffered), never the slowest straggler
                 sim_times = [out.round_sim_time]
             else:
                 dev_map = {d.device_id: d for d in self.devices}
@@ -195,7 +218,10 @@ class NeuLiteServer:
                          n_feasible=len(feasible), mean_loss=mean_loss,
                          upload_bytes=upload,
                          sim_time=float(max(sim_times)) if sim_times else 0.0,
-                         test_acc=acc)
+                         test_acc=acc,
+                         server_version=getattr(
+                             getattr(self.runtime, "state", None),
+                             "version", None))
         self.history.append(rr)
         return rr
 
@@ -222,8 +248,12 @@ class NeuLiteServer:
         the stack (``lax.map`` — one batch's activation footprint, not
         ``max_batches`` at once) and reduces the correct/valid counts on
         device — a single host sync per evaluation instead of one logits
-        transfer per batch.  ``batched=False`` keeps the per-batch
-        reference loop; both paths count identically (regression-tested).
+        transfer per batch.  A ragged final partial batch (external
+        batchers may yield one; ``Batcher`` never does) is padded to the
+        max batch shape with ``mask=False`` rows so the stack stays
+        rectangular and the padding counts in neither numerator nor
+        denominator.  ``batched=False`` keeps the per-batch reference
+        loop; both paths count identically (regression-tested).
         """
         batches = []
         for i, batch in enumerate(self.test_batcher.epoch()):
@@ -251,10 +281,21 @@ class NeuLiteServer:
                 total += int(mask.sum())
             return correct / max(total, 1)
 
-        inputs = jax.tree.map(lambda *xs: np.stack(xs),
+        B = max(np.asarray(b["labels"]).shape[0] for b in batches)
+
+        def pad0(x):
+            x = np.asarray(x)
+            short = B - x.shape[0]
+            if short == 0:
+                return x
+            return np.concatenate(
+                [x, np.zeros((short, *x.shape[1:]), x.dtype)])
+
+        inputs = jax.tree.map(lambda *xs: np.stack([pad0(x) for x in xs]),
                               *[b["inputs"] for b in batches])
-        labels = np.stack([np.asarray(b["labels"]) for b in batches])
-        mask = np.stack([valid_mask(b) for b in batches])
+        labels = np.stack([pad0(b["labels"]) for b in batches])
+        # padded rows get mask=False: excluded from numerator & denominator
+        mask = np.stack([pad0(valid_mask(b)) for b in batches])
         correct, total = self._eval_program()(self.params, inputs, labels,
                                               mask)
         return int(correct) / max(int(total), 1)

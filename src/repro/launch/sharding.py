@@ -159,5 +159,11 @@ def per_device_nbytes(tree) -> int:
     return total
 
 
+def cohort_sharding(mesh, axis: str = "data"):
+    """NamedSharding for 1-D per-cohort arrays (weights, masks, losses):
+    the leading cohort axis shards over the mesh's data axis."""
+    return NamedSharding(mesh, P(axis))
+
+
 def replicated(mesh):
     return NamedSharding(mesh, P())

@@ -1,5 +1,6 @@
-"""AsyncBufferedRuntime: virtual-clock flush planning, staleness-weighted
-aggregation, dropout/fault injection, and server integration."""
+"""AsyncBufferedRuntime: virtual-clock flush planning, cross-round buffer
+state, version-based staleness aggregation, dropout/fault injection, the
+async x sharded (GSPMD) composition, and server integration."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,10 +12,16 @@ from repro.data.loader import stack_round, truncate_step_mask
 from repro.federated import aggregation as agg
 from repro.federated.client import dropout_prob, sample_fault_steps
 from repro.federated.runtime import (AsyncBufferedRuntime,
-                                     VectorizedRuntime, plan_flushes)
+                                     VectorizedRuntime, make_local_program,
+                                     plan_flushes)
 from repro.federated.server import FLConfig, NeuLiteServer
 from repro.models.cnn import CNNConfig
 from repro.optim import sgd
+
+needs_multidevice = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="2-D (data, model) mesh needs >= 4 devices "
+           "(run with XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
 
 # cnn_setup fixture is shared via tests/conftest.py
@@ -33,9 +40,18 @@ def test_plan_flushes_groups_arrivals_and_leaves_stragglers():
     # arrival order: c1(1.0), c2(2.5), c4(3.0), c0(4.0); c3(9.0) pending
     assert [f.tolist() for f in plan.flushes] == [[1, 2], [4, 0]]
     assert plan.pending.tolist() == [3]
-    assert plan.staleness.tolist() == [1, 0, 0, -1, 1]
     # the round closes at the LAST FLUSH, not at the slowest straggler
     assert plan.round_time == 4.0
+
+
+def test_plan_flushes_underfull_buffer_flushes_nothing():
+    """Fewer arrivals than K: nothing flushes — the deliveries stay in the
+    persistent buffer for a later round (the old one-shot simulation
+    clamped K down and force-flushed them)."""
+    plan = plan_flushes([3.0, 1.0], buffer_size=5)
+    assert plan.flushes == []
+    assert plan.pending.tolist() == [1, 0]
+    assert plan.round_time == 0.0
 
 
 def test_plan_flushes_zero_buffer_is_one_synchronous_flush():
@@ -104,11 +120,13 @@ def test_async_full_buffer_matches_vectorized(cnn_setup):
                                float(m_a["mean_local_loss"]), rtol=1e-4)
     assert m_a["n_pending"] == 0
     assert (m_a["staleness"] == 0).all()
+    assert m_a["server_version"] == 1        # exactly one flush happened
 
 
 def test_async_straggler_never_delays_or_moves_the_round(cnn_setup):
     """With K < C the slowest cohort stays pending: the round closes at the
-    last flush and the pending delta must not influence the params."""
+    last flush and the pending delta must not influence THIS round's
+    params (it lands in a later round instead of vanishing)."""
     adapter, params, batchers = cnn_setup
     opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
     hp = CurriculumHP(mu=0.01)
@@ -119,11 +137,71 @@ def test_async_straggler_never_delays_or_moves_the_round(cnn_setup):
     assert m_a["n_pending"] == 1
     assert m_a["staleness"].tolist() == [0, 0, 0, -1]
     assert m_a["sim_round_time"] == 3.0      # not 50
-    # moving the straggler further out changes nothing
+    # moving the straggler further out changes nothing (fresh server: the
+    # runtime is stateful, so the rerun needs its own instance)
+    asy_b = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=3)
     sim2 = np.array([2.0, 1.0, 3.0, 500.0])
-    tr_b, m_b = asy.run_stacked(params, 0, stack, sim_times=sim2)
+    tr_b, m_b = asy_b.run_stacked(params, 0, stack, sim_times=sim2)
     _assert_trees_close(tr_a, tr_b, rtol=0, atol=0)
     assert m_b["sim_round_time"] == 3.0
+    # the straggler is still buffered, not dropped
+    assert len(asy.state) == 1 and asy.state.version == 1
+
+
+def test_async_straggler_lands_next_round_with_version_staleness(cnn_setup):
+    """THE cross-round bugfix: a delta pending at round r aggregates at
+    round r+1 with staleness = server versions elapsed since its pull (not
+    a flush index), numerically checked against a hand-built reference."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack1 = stack_round(batchers, range(4), local_epochs=1)
+    stack2 = stack_round(batchers[:2], [0, 1], local_epochs=1)
+    alpha = 1.0
+    asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=3,
+                               staleness_schedule="polynomial",
+                               staleness_alpha=alpha)
+    # round r: cohort 3 (arrival 100) misses the K=3 flush at t=3
+    tr1, m1 = asy.run_stacked(params, 0, stack1,
+                              sim_times=[1.0, 2.0, 3.0, 100.0])
+    assert m1["staleness"].tolist() == [0, 0, 0, -1]
+    assert m1["n_pending"] == 1 and m1["server_version"] == 1
+    p1 = adapter.merge_stage(params, tr1, 0)
+    # round r+1: two fresh deliveries arrive after the straggler; the K=3
+    # buffer flushes [straggler(pulled v0), fresh, fresh] at version 1
+    tr2, m2 = asy.run_stacked(p1, 0, stack2, sim_times=[200.0, 300.0])
+    assert m2["n_carried"] == 1 and m2["n_uploads"] == 3
+    assert m2["staleness"].tolist() == [0, 0]     # the fresh pair
+    assert m2["n_pending"] == 0 and m2["server_version"] == 2
+    # round r ended at flush time 3; arrivals 200/300 are durations from
+    # there, so the round spans 303 - 3
+    assert m2["sim_round_time"] == pytest.approx(300.0)
+
+    # hand-built reference: deltas straight from the local program, the
+    # straggler discounted at TRUE staleness 1, the fresh pair at 0
+    local = jax.jit(make_local_program(adapter, opt, hp, 0))
+    frozen0, base0 = adapter.split_stage(params, 0)
+    locals1, _ = local(base0, frozen0,
+                       jax.tree.map(jnp.asarray, stack1.batches),
+                       jnp.asarray(stack1.step_mask))
+    frozen1, base1 = adapter.split_stage(p1, 0)
+    locals2, _ = local(base1, frozen1,
+                       jax.tree.map(jnp.asarray, stack2.batches),
+                       jnp.asarray(stack2.step_mask))
+    f32 = lambda tree: jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+    straggler = jax.tree.map(lambda loc, b: loc[3].astype(jnp.float32)
+                             - b.astype(jnp.float32), locals1, base0)
+    fresh = jax.tree.map(lambda loc, b: loc[:2].astype(jnp.float32)
+                         - b.astype(jnp.float32)[None], locals2, base1)
+    stacked = jax.tree.map(lambda s, f: jnp.concatenate([s[None], f]),
+                           straggler, fresh)
+    w = [stack1.weights[3], stack2.weights[0], stack2.weights[1]]
+    update, _ = agg.buffered_flush_average(stacked, w, [1, 0, 0],
+                                           schedule="polynomial",
+                                           alpha=alpha)
+    expect = jax.tree.map(lambda b, u, ref: (b + u).astype(ref.dtype),
+                          f32(base1), update, base1)
+    _assert_trees_close(expect, tr2, rtol=1e-4, atol=1e-5)
 
 
 def test_async_staleness_discount_shrinks_late_flushes(cnn_setup):
@@ -233,33 +311,184 @@ def test_crashed_cohorts_never_deliver(cnn_setup):
 
 
 def test_dead_cohorts_do_not_displace_survivor(cnn_setup):
-    """Two step-0 crashes + one survivor with K=2: the survivor's update
-    must be aggregated, not pushed into pending by dead buffer slots."""
+    """Two step-0 crashes + one survivor with K=2: the dead cohorts take no
+    buffer slots, so the survivor's delivery is the buffer's ONLY entry —
+    it stays buffered this round (one short of K) and aggregates next
+    round instead of being dropped or displaced."""
     adapter, params, batchers = cnn_setup
     opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
     hp = CurriculumHP(mu=0.01)
     asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=2)
     out = asy.run_round(params, 0, batchers, [0, 1, 2], 1,
                         faults=[0, 0, None])
-    assert out.n_uploads == 1
-    assert np.isfinite(float(out.mean_loss))
-    # params actually moved (the survivor's delta was applied)
+    assert out.n_uploads == 0 and len(asy.state) == 1
+    assert np.isnan(float(out.mean_loss))    # nothing aggregated yet
+    _assert_trees_close(out.params, params, rtol=0, atol=0)
+    # next round's deliveries complete the buffer: the survivor lands
+    out2 = asy.run_round(out.params, 0, batchers, [0, 1, 2], 1)
+    assert out2.n_uploads == 4               # 3 fresh + 1 carried survivor
+    assert len(asy.state) == 0
+    assert np.isfinite(float(out2.mean_loss))
     moved = any(
         not np.array_equal(np.asarray(a), np.asarray(b))
-        for a, b in zip(jax.tree.leaves(out.params),
+        for a, b in zip(jax.tree.leaves(out2.params),
                         jax.tree.leaves(params)))
     assert moved
 
 
 def test_async_upload_accounting_excludes_pending(cnn_setup):
-    """Pending stragglers' deltas are dropped, so they must not count as
-    uploads in the round metrics."""
+    """A pending straggler's delta has not been aggregated yet, so it must
+    not count as an upload until the round its flush lands."""
     adapter, params, batchers = cnn_setup
     opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
     asy = AsyncBufferedRuntime(adapter, opt, CurriculumHP(mu=0.01),
                                buffer_size=3)
     out = asy.run_round(params, 0, batchers, [0, 1, 2, 3], 1)
     assert out.n_uploads == 3                        # 1 straggler pending
+
+
+def test_async_buffer_holds_other_stage_entries(cnn_setup):
+    """Progressive stages interleave: a delta pending from a stage-0 round
+    must sit out a stage-1 round untouched (its trainable subtree does not
+    even exist there) and flush when stage 0 next runs."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=3)
+    out = asy.run_round(params, 0, batchers, [0, 1, 2, 3], 1)
+    assert len(asy.state) == 1                       # stage-0 straggler
+    # a stage-1 round: 2 deliveries < K=3, and the stage-0 entry must not
+    # fill the gap — everything stays buffered, params untouched
+    out1 = asy.run_round(out.params, 1, batchers[:2], [0, 1], 1)
+    assert out1.n_uploads == 0 and len(asy.state) == 3
+    _assert_trees_close(out1.params, out.params, rtol=0, atol=0)
+    # stage 0 returns: its straggler + 2 fresh stage-0 deliveries flush
+    # (the two stage-1 entries keep waiting for a stage-1 round)
+    out2 = asy.run_round(out1.params, 0, batchers[:2], [0, 1], 1)
+    assert out2.n_uploads == 3 and len(asy.state) == 2
+    assert all(e.stage == 1 for e in asy.state.entries)
+
+
+def test_async_monotone_schedule_retires_stranded_stages():
+    """Under a monotone stage schedule (sequential / plateau) a stage the
+    server moved past never trains again — its pending deltas must be
+    retired from the buffer instead of stranded (holding device arrays)
+    for the rest of the run."""
+    from repro.federated.runtime import AsyncServerState, BufferEntry
+
+    state = AsyncServerState()
+    state.entries = [
+        BufferEntry(delta=None, weight=1.0, loss=0.0, pulled_version=0,
+                    arrival_time=1.0, stage=s, cohort=s)
+        for s in (0, 0, 1, 2)]
+    dropped = state.drop_retired_stages(1)
+    assert [e.stage for e in dropped] == [0, 0]
+    assert [e.stage for e in state.entries] == [1, 2]
+
+    # server integration: co_adaptation=False selects the monotone
+    # SequentialSchedule; stage-0 stragglers must not survive into stage 1
+    ds = make_image_dataset(0, 240, num_classes=4, image_size=8)
+    parts = dirichlet_partition(0, ds.labels, 6, alpha=1.0)
+    clients = [ds.subset(p) for p in parts]
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    flc = FLConfig(n_devices=6, clients_per_round=3, local_epochs=1,
+                   batch_size=16, num_stages=2, seed=0, runtime="async",
+                   buffer_size=4, co_adaptation=False, rounds_per_stage=1)
+    srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients, flc)
+    assert not srv.schedule.revisits_stages
+    srv.run(3)          # rounds 1+ run stage 1; round 0's stage-0 tail
+    assert all(e.stage >= 1 for e in srv.runtime.state.entries)
+
+
+def test_async_max_staleness_evicts(cnn_setup):
+    """max_staleness is the only sanctioned drop: entries further behind
+    than the cap leave the buffer (counted), instead of aggregating with a
+    vanishing discount forever."""
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack4 = stack_round(batchers, range(4), local_epochs=1)
+    stack2 = stack_round(batchers[:2], [0, 1], local_epochs=1)
+    asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=3,
+                               max_staleness=0)
+    _, m1 = asy.run_stacked(params, 0, stack4,
+                            sim_times=[1.0, 2.0, 3.0, 100.0])
+    assert m1["n_pending"] == 1                      # straggler buffered
+    # after the flush the server is at version 1; the straggler (pulled at
+    # v0) is 1 > max_staleness behind and gets evicted at the next round
+    _, m2 = asy.run_stacked(params, 0, stack2, sim_times=[200.0, 300.0])
+    assert m2["n_evicted"] == 1 and m2["n_carried"] == 0
+    assert m2["n_uploads"] == 0 and m2["n_pending"] == 2  # 2 fresh < K
+
+
+# --------------------------------------------------------------------------- #
+# async x sharded composition: local training + buffered flushes on the
+# 2-D (data, model) mesh
+# --------------------------------------------------------------------------- #
+@needs_multidevice
+def test_async_2d_single_flush_matches_vectorized(cnn_setup):
+    """K = cohort size on a fresh model-sharded async server must
+    reproduce the replicated vectorized round at rtol 1e-4, with
+    per-device trainable bytes ~1/2 of replicated."""
+    from repro.launch.sharding import per_device_nbytes
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack = stack_round(batchers, range(len(batchers)), local_epochs=1)
+    for t in range(adapter.plan.num_stages):
+        vec = VectorizedRuntime(adapter, opt, hp)
+        asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=0,
+                                   model_parallel=2)
+        assert asy.model_shards == 2
+        tr_v, m_v = vec.run_stacked(params, t, stack)
+        tr_a, m_a = asy.run_stacked(params, t, stack)
+        _assert_trees_close(tr_v, tr_a, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(m_v["mean_local_loss"]),
+                                   float(m_a["mean_local_loss"]),
+                                   rtol=1e-4)
+        replicated = per_device_nbytes(tr_v)
+        sharded = per_device_nbytes(tr_a)
+        assert sharded < 0.65 * replicated, (sharded, replicated)
+
+
+@needs_multidevice
+def test_async_2d_carries_stragglers_across_rounds(cnn_setup):
+    """The cross-round buffer must behave identically under GSPMD: a
+    straggler pending on the mesh lands in the next round's flush and the
+    aggregate keeps its model-sharded placement."""
+    from repro.launch.sharding import per_device_nbytes
+    adapter, params, batchers = cnn_setup
+    opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+    hp = CurriculumHP(mu=0.01)
+    stack4 = stack_round(batchers, range(4), local_epochs=1)
+    stack2 = stack_round(batchers[:2], [0, 1], local_epochs=1)
+
+    def run(model_parallel):
+        asy = AsyncBufferedRuntime(adapter, opt, hp, buffer_size=3,
+                                   model_parallel=model_parallel)
+        tr1, m1 = asy.run_stacked(params, 0, stack4,
+                                  sim_times=[1.0, 2.0, 3.0, 100.0])
+        p1 = adapter.merge_stage(params, tr1, 0)
+        tr2, m2 = asy.run_stacked(p1, 0, stack2,
+                                  sim_times=[200.0, 300.0])
+        return tr2, m1, m2
+
+    tr_rep, _, m2_rep = run(1)
+    tr_2d, m1_2d, m2_2d = run(2)
+    assert m1_2d["n_pending"] == 1
+    assert m2_2d["n_carried"] == 1 and m2_2d["n_uploads"] == 3
+    _assert_trees_close(tr_rep, tr_2d, rtol=1e-4, atol=1e-5)
+    assert per_device_nbytes(tr_2d) < 0.65 * per_device_nbytes(tr_rep)
+
+
+@needs_multidevice
+def test_async_rejects_contradictory_mesh(cnn_setup):
+    from repro.launch.mesh import make_host_mesh
+    adapter, _, _ = cnn_setup
+    with pytest.raises(ValueError, match="contradicts"):
+        AsyncBufferedRuntime(adapter, sgd(0.05), CurriculumHP(),
+                             mesh=make_host_mesh(1), model_parallel=4)
 
 
 def test_all_dropped_round_is_lost_but_safe(cnn_setup):
@@ -300,3 +529,8 @@ def test_server_async_rounds_with_dropout():
             assert h.sim_time > 0
     # the run must make real progress: at least one round aggregated
     assert any(np.isfinite(h.mean_loss) for h in hist)
+    # the server version is the monotone flush counter, surfaced per round
+    versions = [h.server_version for h in hist]
+    assert all(v is not None for v in versions)
+    assert versions == sorted(versions) and versions[-1] >= 1
+    assert versions[-1] == srv.runtime.state.version

@@ -1,0 +1,150 @@
+"""Property-based invariants of the cross-round async server state
+(hypothesis; conftest shims a seeded fallback when absent).
+
+The contract under test, however arrivals interleave across rounds, stages,
+and buffer sizes:
+
+(a) exactly-once delivery — no delivered delta is ever dropped or
+    double-aggregated: every entry is either flushed exactly once or still
+    pending in the buffer (``max_staleness`` eviction is the only
+    sanctioned drop, and only past the explicit cap);
+(b) pending entries never leak into a round's upload/flush accounting
+    before their flush lands;
+(c) staleness is TRUE versions-behind — at flush time each entry's
+    staleness equals the server versions elapsed since its pull, entries
+    within one flush may differ, and every flush bumps the version by one;
+(d) flushes respect arrival order on the absolute virtual clock, and the
+    clock never runs backwards.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.federated.runtime import AsyncServerState, BufferEntry
+
+import pytest
+
+
+def _entry(state: AsyncServerState, uid: int, dt: float,
+           stage: int) -> BufferEntry:
+    """A delivery pulled at the server's current version, arriving ``dt``
+    after its round opens (scalar stand-in for the delta pytree)."""
+    return BufferEntry(delta={"w": np.float32(uid)}, weight=1.0 + uid,
+                       loss=0.0, pulled_version=state.version,
+                       arrival_time=state.clock + dt, stage=stage,
+                       cohort=uid)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rounds=st.lists(st.lists(st.floats(0.1, 50.0),
+                                min_size=0, max_size=6),
+                       min_size=1, max_size=6),
+       buffer_size=st.integers(0, 4),
+       stages=st.lists(st.integers(0, 1), min_size=6, max_size=6))
+def test_exactly_once_version_staleness_and_ordering(rounds, buffer_size,
+                                                     stages):
+    state = AsyncServerState()
+    delivered, flushed = [], []
+    uid = 0
+    for r, times in enumerate(rounds):
+        stage = stages[r % len(stages)]
+        clock_before = state.clock
+        new = []
+        for dt in times:
+            new.append(_entry(state, uid, dt, stage))
+            uid += 1
+        delivered.extend(new)
+        version_before = state.version
+        flushes = state.schedule(new, buffer_size, stage)
+        assert state.version == version_before + len(flushes)
+        for j, fl in enumerate(flushes):
+            # (c) every flush bumps the version once, in order, and each
+            # entry's staleness is the versions elapsed since ITS pull —
+            # one flush can mix entries at different staleness
+            assert fl.version == version_before + j
+            for e, s in zip(fl.entries, fl.staleness):
+                assert e.stage == stage         # other stages never flush
+                assert s == fl.version - e.pulled_version
+                assert s >= 0
+            # (d) arrival order within the flush; the flush closes at its
+            # last arrival
+            ts = [e.arrival_time for e in fl.entries]
+            assert ts == sorted(ts)
+            assert fl.time == ts[-1]
+            if buffer_size > 0:                 # K-sized groups exactly
+                assert len(fl.entries) == buffer_size
+            flushed.extend(fl.entries)
+        # (b) nothing pending has been flush-counted
+        flushed_ids = {id(e) for e in flushed}
+        assert all(id(e) not in flushed_ids for e in state.entries)
+        # (d) the clock is monotone (advances only to a flush time)
+        assert state.clock >= clock_before
+    # (a) exactly-once: flushed once XOR still pending; nothing vanishes
+    assert len({id(e) for e in flushed}) == len(flushed)
+    assert sorted([id(e) for e in flushed]
+                  + [id(e) for e in state.entries]) == \
+        sorted(id(e) for e in delivered)
+
+
+@settings(max_examples=30, deadline=None)
+@given(times=st.lists(st.floats(0.1, 20.0), min_size=1, max_size=8),
+       buffer_size=st.integers(1, 4),
+       n_rounds=st.integers(1, 4))
+def test_repeated_rounds_conserve_total_weight(times, buffer_size,
+                                               n_rounds):
+    """Weight conservation across rounds: total delivered weight ==
+    flushed weight + pending weight at every round boundary (dropping a
+    straggler's delta would show up as a deficit here)."""
+    state = AsyncServerState()
+    uid, total_in, total_flushed = 0, 0.0, 0.0
+    for _ in range(n_rounds):
+        new = []
+        for dt in times:
+            new.append(_entry(state, uid, dt, stage=0))
+            uid += 1
+        total_in += sum(e.weight for e in new)
+        for fl in state.schedule(new, buffer_size, stage=0):
+            total_flushed += sum(e.weight for e in fl.entries)
+        pending = sum(e.weight for e in state.entries)
+        np.testing.assert_allclose(total_flushed + pending, total_in,
+                                   rtol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(version=st.integers(0, 6), cap=st.integers(0, 3))
+def test_evict_stale_is_an_exact_boundary(version, cap):
+    """Eviction drops exactly the entries strictly beyond ``cap`` versions
+    behind; ``None`` never drops anything."""
+    state = AsyncServerState()
+    state.version = version
+    state.entries = [
+        BufferEntry(delta=None, weight=1.0, loss=0.0, pulled_version=v,
+                    arrival_time=0.0, stage=0, cohort=v)
+        for v in range(version + 1)]
+    before = list(state.entries)
+    assert state.evict_stale(None) == []
+    assert state.entries == before
+    evicted = state.evict_stale(cap)
+    assert all(version - e.pulled_version > cap for e in evicted)
+    assert all(version - e.pulled_version <= cap for e in state.entries)
+    assert len(evicted) + len(state.entries) == len(before)
+
+
+def test_schedule_holds_other_stage_entries_verbatim():
+    state = AsyncServerState()
+    held = _entry(state, 0, 5.0, stage=0)
+    state.entries = [held]
+    flushes = state.schedule([_entry(state, 1, 1.0, stage=1)], 1, stage=1)
+    assert len(flushes) == 1
+    assert [e.cohort for e in flushes[0].entries] == [1]
+    assert state.entries == [held]              # untouched, still buffered
+
+
+def test_schedule_empty_round_is_a_noop():
+    state = AsyncServerState()
+    assert state.schedule([], 2, stage=0) == []
+    assert state.version == 0 and state.clock == 0.0 and len(state) == 0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -141,6 +141,8 @@ _MATRIX_BACKENDS = {
     "sharded-2d": lambda a, o, h: ShardedRuntime(a, o, h, model_parallel=2),
     "async-zero-staleness": lambda a, o, h: AsyncBufferedRuntime(
         a, o, h, buffer_size=0, staleness_schedule="polynomial"),
+    "async-2d": lambda a, o, h: AsyncBufferedRuntime(
+        a, o, h, buffer_size=0, model_parallel=2),
 }
 _MATRIX_REF = {}
 
@@ -160,7 +162,7 @@ def _matrix_reference(setup, request):
 
 
 @pytest.mark.parametrize("backend", [
-    pytest.param(b, marks=(needs_multidevice,) if b == "sharded-2d" else ())
+    pytest.param(b, marks=(needs_multidevice,) if b.endswith("-2d") else ())
     for b in sorted(_MATRIX_BACKENDS)])
 @pytest.mark.parametrize("setup", ["cnn_setup", "tx_setup"])
 def test_backend_matrix_matches_sequential(setup, backend, request):
@@ -295,6 +297,44 @@ def test_make_runtime_resolution(cnn_setup):
         make_runtime("warp-drive", adapter, opt, hp)
 
 
+def test_make_runtime_rejects_kwargs_on_instance(cnn_setup):
+    """Constructor kwargs cannot apply to an already-built runtime — they
+    used to be silently discarded (e.g. a buffer_size that never took
+    effect); now that is a loud error naming the ignored kwargs."""
+    adapter, _, _ = cnn_setup
+    opt, hp = sgd(0.05), CurriculumHP()
+    rt = make_runtime("vectorized", adapter, opt, hp)
+    with pytest.raises(ValueError, match="buffer_size"):
+        make_runtime(rt, adapter, opt, hp, buffer_size=4)
+    with pytest.raises(ValueError, match="model_parallel"):
+        make_runtime(rt, adapter, opt, hp, model_parallel=2)
+
+
+def test_sequential_zero_sample_round_is_lost_not_crash(cnn_setup):
+    """The sequential fast path with every cohort at zero samples must
+    return the documented lost round (params unchanged, NaN loss) exactly
+    like the base-class stacked path — not raise from the Eq. 1 zero-sum
+    guard or divide by zero in the loss weights."""
+
+    class _EmptyBatcher:
+        ds = ()
+        num_samples = 0
+        steps_per_epoch = 0
+
+        def epoch(self):
+            return iter(())
+
+    adapter, params, _ = cnn_setup
+    seq = SequentialRuntime(adapter, sgd(0.05), CurriculumHP(mu=0.01))
+    out = seq.run_round(params, 0, [_EmptyBatcher(), _EmptyBatcher()],
+                        [0, 1], local_epochs=1)
+    _assert_trees_equal(out.params, params, rtol=0, atol=0)
+    assert np.isnan(float(out.mean_loss))
+    assert out.n_uploads == 0
+    assert out.num_samples == [0.0, 0.0]
+    assert out.num_batches == [0, 0]
+
+
 def test_evaluate_batched_matches_sequential_loop():
     """The vmapped one-program evaluate must count exactly like the
     per-batch reference loop on identical data (image and LM labels)."""
@@ -311,6 +351,34 @@ def test_evaluate_batched_matches_sequential_loop():
     srv.test_batcher = Batcher(test, 32, seed=11, kind="image")
     loop = srv.evaluate(max_batches=3, batched=False)
     srv.test_batcher = Batcher(test, 32, seed=11, kind="image")
+    batched = srv.evaluate(max_batches=3, batched=True)
+    assert batched == loop
+
+
+def test_evaluate_batched_handles_ragged_final_batch():
+    """External batchers may yield a ragged final partial batch; the
+    batched path must pad it with mask=False rows and count exactly like
+    the per-batch loop (it used to crash in np.stack or miscount)."""
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    ds = make_image_dataset(0, 160, num_classes=4, image_size=8)
+    test = make_image_dataset(3, 80, num_classes=4, image_size=8)
+    flc = FLConfig(n_devices=4, clients_per_round=2, local_epochs=1,
+                   batch_size=16, num_stages=2, seed=0)
+    parts = dirichlet_partition(0, ds.labels, 4, alpha=1.0)
+    srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages),
+                        [ds.subset(p) for p in parts], flc)
+
+    class _RaggedBatcher:
+        """Yields 2 full 32-row batches + 1 partial 16-row batch."""
+
+        def epoch(self):
+            for lo, hi in ((0, 32), (32, 64), (64, 80)):
+                yield {"inputs": {"images": test.images[lo:hi]},
+                       "labels": test.labels[lo:hi]}
+
+    srv.test_batcher = _RaggedBatcher()
+    loop = srv.evaluate(max_batches=3, batched=False)
     batched = srv.evaluate(max_batches=3, batched=True)
     assert batched == loop
 
