@@ -33,7 +33,7 @@ from __future__ import annotations
 import argparse
 import os
 
-from benchmarks.common import csv_row, timeit
+from benchmarks.common import csv_row, timeit, write_bench_json
 
 
 def _force_host_devices(n: int):
@@ -47,7 +47,10 @@ def _force_host_devices(n: int):
 
 
 def _setup(kind: str, num_cohorts: int, batch_size: int, local_steps: int,
-           seed: int = 0):
+           seed: int = 0, conv_impl: str | None = None,
+           use_hsic_kernel: bool = False):
+    import dataclasses
+
     import jax
     import numpy as np
     from repro.configs.paper_models import resnet18, vit
@@ -58,6 +61,8 @@ def _setup(kind: str, num_cohorts: int, batch_size: int, local_steps: int,
 
     if kind == "cnn":
         cfg = resnet18(num_classes=10, image_size=8, width_mult=0.0625)
+        if conv_impl is not None:
+            cfg = dataclasses.replace(cfg, conv_impl=conv_impl)
         image_size = 8
     else:
         cfg = vit(num_classes=10, image_size=16, num_layers=4, d_model=64)
@@ -74,18 +79,20 @@ def _setup(kind: str, num_cohorts: int, batch_size: int, local_steps: int,
     stack = stack_round(batchers, range(num_cohorts),
                         local_steps=local_steps)
     opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
-    hp = CurriculumHP(mu=0.01)
+    hp = CurriculumHP(mu=0.01, use_hsic_kernel=use_hsic_kernel)
     return adapter, params, opt, hp, stack
 
 
 def bench(kind: str, num_cohorts: int = 16, batch_size: int = 4,
-          local_steps: int = 2, stage: int = 1, iters: int = 3):
+          local_steps: int = 2, stage: int = 1, iters: int = 3,
+          conv_impl: str | None = None, use_hsic_kernel: bool = False):
     """rounds/sec per backend on one stage-t round; returns {name: r/s}."""
     import jax
     from repro.federated.runtime import RUNTIMES
 
-    adapter, params, opt, hp, stack = _setup(kind, num_cohorts, batch_size,
-                                             local_steps)
+    adapter, params, opt, hp, stack = _setup(
+        kind, num_cohorts, batch_size, local_steps, conv_impl=conv_impl,
+        use_hsic_kernel=use_hsic_kernel)
     out = {}
     for name, cls in RUNTIMES.items():
         runtime = cls(adapter, opt, hp)
@@ -179,13 +186,53 @@ def bench_model_parallel(kind: str, model_parallel: int,
     return out
 
 
+def bench_conv_impl(num_cohorts: int = 16, batch_size: int = 4,
+                    local_steps: int = 2, stage: int = 1, iters: int = 3,
+                    use_hsic_kernel: bool = False):
+    """The measured lax-vs-im2col crossover on the *vectorized* CNN round
+    (the shape that decides ``conv_impl="auto"``): per-cohort weights under
+    ``vmap`` lower 3×3 convs to grouped convs whose CPU backward is the
+    round bottleneck; im2col turns them into batched matmuls.  Returns
+    {"lax": r/s, "im2col": r/s, "speedup": ...} at ``num_cohorts``."""
+    import jax
+    from repro.federated.runtime import VectorizedRuntime
+
+    out = {}
+    for impl in ("lax", "im2col"):
+        adapter, params, opt, hp, stack = _setup(
+            "cnn", num_cohorts, batch_size, local_steps, conv_impl=impl,
+            use_hsic_kernel=use_hsic_kernel)
+        rt = VectorizedRuntime(adapter, opt, hp)
+
+        def one_round(rt=rt, params=params, stack=stack):
+            tr, metrics = rt.run_stacked(params, stage, stack)
+            return jax.tree.leaves(tr)[0], metrics["mean_local_loss"]
+
+        out[impl] = 1.0 / timeit(one_round, warmup=1, iters=iters)
+    out["speedup"] = out["im2col"] / out["lax"]
+    out["num_cohorts"] = num_cohorts
+    return out
+
+
 def quick():
+    rows = {}
     for kind in ("cnn", "transformer"):
-        rps = bench(kind, num_cohorts=16, batch_size=4, local_steps=2)
+        # fused flags on: the im2col convs + Pallas-nHSIC loss are the
+        # paths CI must actually execute (ISSUE 6 bench-smoke)
+        rps = bench(kind, num_cohorts=16, batch_size=4, local_steps=2,
+                    conv_impl="im2col" if kind == "cnn" else None,
+                    use_hsic_kernel=True)
+        rows[kind] = rps
         base = rps["sequential"]
         for name, r in rps.items():
             csv_row(f"fl_round_{kind}_{name}", 1e6 / r,
                     f"{r:.2f}r/s x{r / base:.1f}")
+    cross = bench_conv_impl(num_cohorts=16)
+    csv_row("fl_round_conv_crossover", 1e6 / cross["im2col"],
+            f"im2col {cross['im2col']:.2f}r/s vs lax {cross['lax']:.2f}r/s "
+            f"x{cross['speedup']:.2f}")
+    write_bench_json("fl_round", {"rounds_per_s": rows,
+                                  "conv_impl_crossover_cnn": cross})
 
 
 def main():
@@ -195,6 +242,13 @@ def main():
     ap.add_argument("--steps", type=int, default=2)
     ap.add_argument("--stage", type=int, default=1)
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--conv-impl", choices=["auto", "lax", "im2col"],
+                    default="auto",
+                    help="CNN conv lowering (auto: im2col on CPU, lax "
+                         "elsewhere — see models.cnn.resolve_conv_impl)")
+    ap.add_argument("--use-hsic-kernel", action="store_true",
+                    help="route the curriculum's nHSIC terms through the "
+                         "fused Pallas custom_vjp (interpret mode off-TPU)")
     ap.add_argument("--runtime", choices=["all", "async"], default="all",
                     help="'async': simulated-time FedBuff speedup report")
     ap.add_argument("--buffer", type=int, default=0,
@@ -243,12 +297,22 @@ def main():
                       f"{ratio:5.2f}x")
         return
     print(f"{'model':12s} {'backend':12s} {'rounds/s':>9s} {'speedup':>8s}")
+    rows = {}
     for kind in ("cnn", "transformer"):
         rps = bench(kind, args.cohorts, args.batch, args.steps, args.stage,
-                    args.iters)
+                    args.iters, conv_impl=args.conv_impl,
+                    use_hsic_kernel=args.use_hsic_kernel)
+        rows[kind] = rps
         base = rps["sequential"]
         for name, r in rps.items():
             print(f"{kind:12s} {name:12s} {r:9.2f} {r / base:7.1f}x")
+    cross = bench_conv_impl(args.cohorts, args.batch, args.steps, args.stage,
+                            args.iters, use_hsic_kernel=args.use_hsic_kernel)
+    print(f"{'cnn':12s} {'conv-impl':12s} im2col {cross['im2col']:.2f}r/s "
+          f"vs lax {cross['lax']:.2f}r/s = {cross['speedup']:.2f}x "
+          f"at {cross['num_cohorts']} cohorts")
+    write_bench_json("fl_round", {"rounds_per_s": rows,
+                                  "conv_impl_crossover_cnn": cross})
 
 
 if __name__ == "__main__":

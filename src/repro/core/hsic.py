@@ -31,16 +31,29 @@ def pairwise_sqdists(x):
     return jnp.maximum(d2, 0.0)
 
 
+def rbf_sigma2(x):
+    """Mean-pairwise-sq-distance bandwidth in O(B·D).
+
+    mean_ij ‖xi−xj‖² = 2·mean_i‖xi‖² − 2·‖mean_i xi‖², so the mean heuristic
+    never needs the (B, B) distance matrix.  Shared by the reference
+    ``gram_rbf`` and the Pallas ``kernels.hsic_gram.ops`` path so both use
+    bit-identical bandwidths.  Stop-gradiented: the bandwidth is an estimator
+    hyper-parameter, not a learning signal (median is not smooth; mean
+    behaves similarly and keeps the loss differentiable w.r.t. activations).
+    """
+    x = x.astype(jnp.float32)
+    s = 2.0 * jnp.mean(jnp.sum(x * x, axis=1)) \
+        - 2.0 * jnp.sum(jnp.square(x.mean(axis=0)))
+    return jax.lax.stop_gradient(jnp.maximum(s, _EPS))
+
+
 def gram_rbf(x, sigma: float | None = None):
     """Gaussian-kernel Gram matrix with mean-distance bandwidth heuristic."""
     d2 = pairwise_sqdists(x)
     if sigma is None:
-        # mean heuristic (median is not smooth; mean behaves similarly here
-        # and keeps the loss differentiable w.r.t. activations)
-        sigma2 = jnp.mean(d2) + _EPS
+        sigma2 = rbf_sigma2(x)
     else:
-        sigma2 = jnp.asarray(sigma, jnp.float32) ** 2
-    sigma2 = jax.lax.stop_gradient(sigma2)
+        sigma2 = jax.lax.stop_gradient(jnp.asarray(sigma, jnp.float32) ** 2)
     return jnp.exp(-d2 / (2.0 * sigma2))
 
 

@@ -58,6 +58,9 @@ class FLConfig:
     mu: float = 0.01
     lambda1: float = 2.0
     lambda2: float = 1.0
+    use_hsic_kernel: bool = False       # route the curriculum's nHSIC terms
+                                        # through the fused Pallas kernel
+                                        # (interpret mode off-TPU)
     alpha: float = 1.0                  # Dirichlet concentration
     seed: int = 0
     runtime: str = "sequential"         # sequential | vectorized | sharded
@@ -111,7 +114,8 @@ class NeuLiteServer:
         self.optimizer = optim.sgd(flc.lr, flc.momentum, flc.weight_decay)
         self.hp = CurriculumHP(lambda1_max=flc.lambda1,
                                lambda2_max=flc.lambda2, mu=flc.mu,
-                               enabled=flc.curriculum)
+                               enabled=flc.curriculum,
+                               use_hsic_kernel=flc.use_hsic_kernel)
         spec = runtime if runtime is not None else flc.runtime
         rt_kwargs = {}
         if spec == "async":

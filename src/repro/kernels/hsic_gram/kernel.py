@@ -17,6 +17,12 @@ tiles the computation over (block_m × block_n) VMEM blocks feeding the MXU
 Grid is 2-D over Gram blocks; D is loaded whole per block (activations are
 projected to ≤ a few hundred dims before HSIC, so a (block, D) tile fits
 VMEM comfortably: 128×512×4B = 256 KiB).
+
+The *streaming* kernels below (``nhsic_rowsums_pallas``,
+``nhsic_stats_feats_pallas``, ``nhsic_grad_pallas``) go one step further:
+they recompute Gram tiles from the (B, D) activations on the fly, so no
+(B, B) matrix ever exists outside a VMEM tile — forward or backward.  They
+back the differentiable ``ops.nhsic`` custom_vjp used by the training loss.
 """
 from __future__ import annotations
 
@@ -133,3 +139,226 @@ def gram_stats_pallas(Kx, Kz, *, block: int = 128, interpret: bool = True):
         interpret=interpret,
     )(Kx.astype(jnp.float32), Kz.astype(jnp.float32), rx, cx, rz, cz, mx, mz)
     return out[0], out[1], out[2]
+
+
+# --------------------------------------------------------------------------- #
+# streaming nHSIC: Gram tiles recomputed from (B, D) activations
+# --------------------------------------------------------------------------- #
+def _divisor_block(B: int, block: int) -> int:
+    """Largest block <= requested that divides B (no padding: a zero pad row
+    would contribute exp(0)=1 entries to an RBF Gram and corrupt the sums)."""
+    block = min(block, B)
+    while B % block:
+        block -= 1
+    return block
+
+
+def _gram_block(a, b, s2, linear: bool):
+    """One (bm, bn) Gram tile from (bm, D) / (bn, D) activation tiles."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    dot = a @ b.T                                    # MXU
+    if linear:
+        return dot
+    sa = jnp.sum(a * a, axis=1)[:, None]
+    sb = jnp.sum(b * b, axis=1)[None, :]
+    d2 = jnp.maximum(sa + sb - 2.0 * dot, 0.0)
+    return jnp.exp(-d2 / (2.0 * s2))
+
+
+def _rowsums_kernel(xr_ref, xc_ref, zr_ref, zc_ref, s_ref, rx_ref, rz_ref, *,
+                    linear_x: bool, linear_z: bool):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        rx_ref[...] = jnp.zeros_like(rx_ref)
+        rz_ref[...] = jnp.zeros_like(rz_ref)
+
+    s = s_ref[...]
+    rx_ref[...] += _gram_block(xr_ref[...], xc_ref[...], s[0],
+                               linear_x).sum(axis=1)
+    rz_ref[...] += _gram_block(zr_ref[...], zc_ref[...], s[1],
+                               linear_z).sum(axis=1)
+
+
+def nhsic_rowsums_pallas(x, z, s2x, s2z, *, linear_x: bool = False,
+                         linear_z: bool = False, block: int = 128,
+                         interpret: bool = True):
+    """Row sums of Kx and Kz computed tile-by-tile from activations.
+
+    Returns (rowsum_x, rowsum_z), each (B,) float32.  Grams are symmetric, so
+    row sums double as column sums and the total sum is their sum."""
+    B = x.shape[0]
+    block = _divisor_block(B, block)
+    nb = B // block
+    s = jnp.stack([jnp.asarray(s2x, jnp.float32),
+                   jnp.asarray(s2z, jnp.float32)])
+    return pl.pallas_call(
+        functools.partial(_rowsums_kernel, linear_x=linear_x,
+                          linear_z=linear_z),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, z.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, z.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B,), jnp.float32),
+                   jax.ShapeDtypeStruct((B,), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), x.astype(jnp.float32),
+      z.astype(jnp.float32), z.astype(jnp.float32), s)
+
+
+def _stats_feats_kernel(xr_ref, xc_ref, zr_ref, zc_ref, rxr_ref, rxc_ref,
+                        rzr_ref, rzc_ref, s_ref, o_ref, acc_ref, *,
+                        nb: int, linear_x: bool, linear_z: bool):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = s_ref[...]
+    kxc = _gram_block(xr_ref[...], xc_ref[...], s[0], linear_x) \
+        - rxr_ref[...][:, None] - rxc_ref[...][None, :] + s[2]
+    kzc = _gram_block(zr_ref[...], zc_ref[...], s[1], linear_z) \
+        - rzr_ref[...][:, None] - rzc_ref[...][None, :] + s[3]
+    acc_ref[0] += jnp.sum(kxc * kzc)
+    acc_ref[1] += jnp.sum(kxc * kxc)
+    acc_ref[2] += jnp.sum(kzc * kzc)
+
+    @pl.when(jnp.logical_and(i == nb - 1, j == nb - 1))
+    def _fin():
+        o_ref[...] = acc_ref[...]
+
+
+def nhsic_stats_feats_pallas(x, z, rx, rz, mx, mz, s2x, s2z, *,
+                             linear_x: bool = False, linear_z: bool = False,
+                             block: int = 128, interpret: bool = True):
+    """(tr(KxcKzc), ‖Kxc‖², ‖Kzc‖²) with Gram tiles recomputed from x/z.
+
+    rx/rz are the (B,) Gram row means, mx/mz the total means (from
+    ``nhsic_rowsums_pallas``); centering is folded into the streaming pass so
+    no (B, B) matrix is ever materialized."""
+    B = x.shape[0]
+    block = _divisor_block(B, block)
+    nb = B // block
+    s = jnp.stack([jnp.asarray(s2x, jnp.float32),
+                   jnp.asarray(s2z, jnp.float32),
+                   jnp.asarray(mx, jnp.float32),
+                   jnp.asarray(mz, jnp.float32)])
+    out = pl.pallas_call(
+        functools.partial(_stats_feats_kernel, nb=nb, linear_x=linear_x,
+                          linear_z=linear_z),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, z.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, z.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((4,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), x.astype(jnp.float32),
+      z.astype(jnp.float32), z.astype(jnp.float32),
+      rx.astype(jnp.float32), rx.astype(jnp.float32),
+      rz.astype(jnp.float32), rz.astype(jnp.float32), s)
+    return out[0], out[1], out[2]
+
+
+def _grad_kernel(xr_ref, xc_ref, zr_ref, zc_ref, rxr_ref, rxc_ref, rzr_ref,
+                 rzc_ref, s_ref, dx_ref, dz_ref, *, linear_x: bool,
+                 linear_z: bool):
+    """Backward tile: cotangents w.r.t. the activations.
+
+    With Kc the centered Grams, N* their Frobenius norms, T = ΣKxcKzc and
+    ḡ the scalar cotangent, the Gram-space cotangents are
+        G_x = cA·Kzc − cBx·Kxc        G_z = cA·Kxc − cBz·Kzc
+    (H is idempotent and self-adjoint, so centering passes through).  For an
+    RBF Gram, W = G∘K·(−1/2σ²) and dx_i = 4·(rowsum(W)∘x_i − W·x_j); for a
+    linear Gram dx_i = 2·G·x_j — both accumulated over column blocks j."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+        dz_ref[...] = jnp.zeros_like(dz_ref)
+
+    s = s_ref[...]
+    s2x, s2z, mx, mz, c_a, c_bx, c_bz = (s[0], s[1], s[2], s[3], s[4], s[5],
+                                         s[6])
+    xr = xr_ref[...].astype(jnp.float32)
+    xc = xc_ref[...].astype(jnp.float32)
+    zr = zr_ref[...].astype(jnp.float32)
+    zc = zc_ref[...].astype(jnp.float32)
+    kx = _gram_block(xr, xc, s2x, linear_x)
+    kz = _gram_block(zr, zc, s2z, linear_z)
+    kxc = kx - rxr_ref[...][:, None] - rxc_ref[...][None, :] + mx
+    kzc = kz - rzr_ref[...][:, None] - rzc_ref[...][None, :] + mz
+    g_x = c_a * kzc - c_bx * kxc
+    g_z = c_a * kxc - c_bz * kzc
+    if linear_x:
+        dx_ref[...] += 2.0 * (g_x @ xc)
+    else:
+        w = g_x * kx * (-1.0 / (2.0 * s2x))
+        dx_ref[...] += 4.0 * (w.sum(axis=1)[:, None] * xr - w @ xc)
+    if linear_z:
+        dz_ref[...] += 2.0 * (g_z @ zc)
+    else:
+        w = g_z * kz * (-1.0 / (2.0 * s2z))
+        dz_ref[...] += 4.0 * (w.sum(axis=1)[:, None] * zr - w @ zc)
+
+
+def nhsic_grad_pallas(x, z, rx, rz, scal, *, linear_x: bool = False,
+                      linear_z: bool = False, block: int = 128,
+                      interpret: bool = True):
+    """Streaming nHSIC backward: (dx, dz) from O(B·D) residuals.
+
+    ``scal`` packs [σ²x, σ²z, mean Kx, mean Kz, cA, cBx, cBz] (see
+    ``ops._nhsic_bwd`` for the coefficients).  Gram tiles are recomputed from
+    the saved activations; nothing B×B is read or written."""
+    B = x.shape[0]
+    block = _divisor_block(B, block)
+    nb = B // block
+    return pl.pallas_call(
+        functools.partial(_grad_kernel, linear_x=linear_x,
+                          linear_z=linear_z),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, z.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, z.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((7,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, z.shape[1]), lambda i, j: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(z.shape, jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), x.astype(jnp.float32),
+      z.astype(jnp.float32), z.astype(jnp.float32),
+      rx.astype(jnp.float32), rx.astype(jnp.float32),
+      rz.astype(jnp.float32), rz.astype(jnp.float32),
+      jnp.asarray(scal, jnp.float32))

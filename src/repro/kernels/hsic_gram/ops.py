@@ -1,4 +1,20 @@
-"""Jit'd public wrapper: nHSIC via the Pallas Gram/stats kernels."""
+"""Jit'd public wrapper: differentiable nHSIC via streaming Pallas kernels.
+
+``nhsic`` is a ``custom_vjp`` whose forward and backward both recompute Gram
+tiles on the fly from the (B, D) activations, so no B×B matrix is ever
+materialized — the residuals saved between fwd and bwd are the two activation
+matrices plus O(B) row means and a handful of scalars.
+
+Backward math (H idempotent + self-adjoint, so centering commutes with the
+adjoint):  with T = Σ K̃xK̃z, N* = ‖K̃*‖_F, f = T/(NxNz+ε) and scalar
+cotangent ḡ,
+
+    ∂f/∂Kx = (K̃z − f·(Nz/Nx)·K̃x) / (NxNz+ε)
+
+giving Gram-space cotangents G_x = cA·K̃z − cBx·K̃x (symmetrically for z),
+then the RBF/linear chain rule maps G back to the activations inside the
+same tiled pass (``kernel.nhsic_grad_pallas``).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,9 +22,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hsic_gram.kernel import gram_pallas, gram_stats_pallas
+from repro.core.hsic import rbf_sigma2
+from repro.kernels.hsic_gram.kernel import (gram_pallas, gram_stats_pallas,
+                                            nhsic_grad_pallas,
+                                            nhsic_rowsums_pallas,
+                                            nhsic_stats_feats_pallas)
 
 _EPS = 1e-8
+# Nx→0 guard; large enough that _TINY·_EPS doesn't flush to 0 in f32
+_TINY = 1e-12
 
 
 def _on_tpu() -> bool:
@@ -18,20 +40,89 @@ def _on_tpu() -> bool:
         return False
 
 
-def _sigma2(x):
-    """Mean pairwise sq-distance in O(B·D):
-    mean_ij ‖xi−xj‖² = 2·mean‖x‖² − 2‖mean x‖²."""
-    x = x.astype(jnp.float32)
-    s = 2.0 * jnp.mean(jnp.sum(x * x, axis=1)) \
-        - 2.0 * jnp.sum(jnp.square(x.mean(axis=0)))
-    return jax.lax.stop_gradient(jnp.maximum(s, _EPS))
+# kept as an alias: the bandwidth lives in core.hsic so the reference and the
+# kernel path share one definition (see ISSUE 6 / test_sigma_identity)
+_sigma2 = rbf_sigma2
+
+
+def _nhsic_fwd(x, z, kernel_x, kernel_z, block, interpret):
+    """Forward pass + O(B·D) residuals.  Two streaming passes:
+    row sums first (centering needs them), then centered statistics."""
+    B = x.shape[0]
+    lx = kernel_x == "linear"
+    lz = kernel_z == "linear"
+    s2x = jnp.float32(1.0) if lx else _sigma2(x)
+    s2z = jnp.float32(1.0) if lz else _sigma2(z)
+    rxs, rzs = nhsic_rowsums_pallas(x, z, s2x, s2z, linear_x=lx, linear_z=lz,
+                                    block=block, interpret=interpret)
+    rx = rxs / B                     # Gram row means (= col means: symmetric)
+    rz = rzs / B
+    mx = jnp.sum(rxs) / (B * B)      # total means
+    mz = jnp.sum(rzs) / (B * B)
+    t, nx2, nz2 = nhsic_stats_feats_pallas(
+        x, z, rx, rz, mx, mz, s2x, s2z, linear_x=lx, linear_z=lz,
+        block=block, interpret=interpret)
+    nx = jnp.sqrt(nx2)
+    nz = jnp.sqrt(nz2)
+    out = t / (nx * nz + _EPS)
+    return out, (x, z, rx, rz, s2x, s2z, mx, mz, t, nx, nz)
+
+
+def _nhsic_bwd(kernel_x, kernel_z, block, interpret, res, g):
+    x, z, rx, rz, s2x, s2z, mx, mz, t, nx, nz = res
+    denom = nx * nz + _EPS
+    f = t / denom
+    # ∂out/∂Kx = (K̃z − f·(Nz/Nx)·K̃x)/denom; guard Nx→0 (degenerate, e.g.
+    # all-identical rows from zero-padded cohorts): the true limit grad is
+    # discarded by the cohort mask anyway, a 0 beats a NaN.
+    c_a = g / denom
+    c_bx = g * f * nz / (jnp.maximum(nx, _TINY) * denom)
+    c_bz = g * f * nx / (jnp.maximum(nz, _TINY) * denom)
+    scal = jnp.stack([s2x, s2z, mx, mz, c_a, c_bx, c_bz])
+    dx, dz = nhsic_grad_pallas(
+        x, z, rx, rz, scal, linear_x=(kernel_x == "linear"),
+        linear_z=(kernel_z == "linear"), block=block, interpret=interpret)
+    return dx.astype(x.dtype), dz.astype(z.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _nhsic_fused(x, z, kernel_x, kernel_z, block, interpret):
+    out, _ = _nhsic_fwd(x, z, kernel_x, kernel_z, block, interpret)
+    return out
+
+
+_nhsic_fused.defvjp(_nhsic_fwd, _nhsic_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("kernel_x", "kernel_z", "block",
                                              "interpret"))
 def nhsic(x, z, *, kernel_x: str = "rbf", kernel_z: str = "rbf",
           block: int = 128, interpret: bool | None = None):
-    """Kernel-accelerated nHSIC(x, z); x: (B, Dx), z: (B, Dz)."""
+    """Kernel-accelerated, differentiable nHSIC(x, z); x: (B, Dx), z: (B, Dz).
+
+    ``interpret=None`` resolves to interpret mode off-TPU, so the same code
+    path runs (and is gradient-tested) on CPU CI."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _nhsic_fused(jnp.asarray(x, jnp.float32),
+                        jnp.asarray(z, jnp.float32),
+                        kernel_x, kernel_z, int(block), bool(interpret))
+
+
+def nhsic_residuals(x, z, *, kernel_x: str = "rbf", kernel_z: str = "rbf",
+                    block: int = 128, interpret: bool | None = None):
+    """(value, residual pytree) of the fused fwd — introspection hook for
+    benchmarks/tests asserting the bwd residuals stay O(B·D) (no B×B leaf)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _nhsic_fwd(jnp.asarray(x, jnp.float32), jnp.asarray(z, jnp.float32),
+                      kernel_x, kernel_z, int(block), bool(interpret))
+
+
+def nhsic_unfused(x, z, *, kernel_x: str = "rbf", kernel_z: str = "rbf",
+                  block: int = 128, interpret: bool | None = None):
+    """Forward-only two-kernel path (dense B×B Grams in HBM).  Kept for
+    benchmarking the fused streaming path against; not differentiable."""
     if interpret is None:
         interpret = not _on_tpu()
     Kx = gram_pallas(x, _sigma2(x), linear=(kernel_x == "linear"),

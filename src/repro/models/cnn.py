@@ -36,6 +36,7 @@ class CNNConfig:
     in_channels: int = 3
     image_size: int = 32
     groups: int = 8                # GroupNorm groups
+    conv_impl: str = "auto"        # lax | im2col | auto (see resolve_conv_impl)
 
     def scaled(self, c: int) -> int:
         return max(self.groups, int(c * self.width_mult) // self.groups
@@ -51,7 +52,47 @@ def conv_defs(cin: int, cout: int, k: int = 3) -> dict:
                           scale=(2.0 / (k * k * cin)) ** 0.5)}
 
 
-def conv(params, x, stride: int = 1):
+def resolve_conv_impl(impl: str) -> str:
+    """Map ``conv_impl="auto"`` to a concrete implementation per backend.
+
+    ``fl_round_throughput`` measures the crossover: under ``vmap`` over
+    per-cohort weights ``lax.conv`` lowers to a grouped convolution (feature
+    group per cohort) that CPU XLA executes serially, while the im2col/einsum
+    form lowers to one batched matmul; on TPU/GPU the native conv is the
+    fast path.  Hence: im2col on CPU, lax elsewhere."""
+    if impl == "auto":
+        return "im2col" if jax.default_backend() == "cpu" else "lax"
+    return impl
+
+
+def _conv_im2col(params, x, stride: int = 1):
+    """SAME conv as patch-extraction + einsum (matmul-shaped, vmap-friendly).
+
+    Identical math to ``lax.conv_general_dilated`` — k² strided slices of the
+    SAME-padded input concatenated to (B, OH, OW, k²·Cin), contracted with
+    the (k²·Cin, Cout) reshaped weight.  Patches are built with plain slices
+    (not ``conv_general_dilated_patches``, which lowers back to a conv)."""
+    w = params["w"]
+    k, _, cin, cout = w.shape
+    B, H, W, _ = x.shape
+    if k == 1 and stride == 1:
+        return jnp.einsum("bhwc,co->bhwo", x, w[0, 0])
+    oh = -(-H // stride)
+    ow = -(-W // stride)
+    ph = max((oh - 1) * stride + k - H, 0)
+    pw = max((ow - 1) * stride + k - W, 0)
+    xp = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                     (pw // 2, pw - pw // 2), (0, 0)))
+    patches = [xp[:, di:di + (oh - 1) * stride + 1:stride,
+                  dj:dj + (ow - 1) * stride + 1:stride, :]
+               for di in range(k) for dj in range(k)]
+    cols = jnp.concatenate(patches, axis=-1)        # (B, OH, OW, k²·Cin)
+    return jnp.einsum("bhwp,po->bhwo", cols, w.reshape(k * k * cin, cout))
+
+
+def conv(params, x, stride: int = 1, impl: str = "lax"):
+    if impl == "im2col":
+        return _conv_im2col(params, x, stride)
     return jax.lax.conv_general_dilated(
         x, params["w"], (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -113,29 +154,31 @@ def _fire_unit(cfg, cin, squeeze, expand, pool):
                      "stride": 2 if pool else 1}, d)
 
 
-def _unit_apply(kind, meta, params, x, groups):
+def _unit_apply(kind, meta, params, x, groups, impl: str = "lax"):
     s = meta["stride"]
     if kind == "stem":
-        return jax.nn.relu(groupnorm(params["gn"], conv(params["conv"], x, s),
+        return jax.nn.relu(groupnorm(params["gn"],
+                                     conv(params["conv"], x, s, impl),
                                      groups))
     if kind == "basic":
-        h = jax.nn.relu(groupnorm(params["gn1"], conv(params["conv1"], x, s),
-                                  groups))
-        h = groupnorm(params["gn2"], conv(params["conv2"], h, 1), groups)
-        sc = conv(params["proj"], x, s) if "proj" in params else x
+        h = jax.nn.relu(groupnorm(params["gn1"],
+                                  conv(params["conv1"], x, s, impl), groups))
+        h = groupnorm(params["gn2"], conv(params["conv2"], h, 1, impl), groups)
+        sc = conv(params["proj"], x, s, impl) if "proj" in params else x
         return jax.nn.relu(h + sc)
     if kind == "vgg":
-        h = jax.nn.relu(groupnorm(params["gn"], conv(params["conv"], x, 1),
-                                  groups))
+        h = jax.nn.relu(groupnorm(params["gn"],
+                                  conv(params["conv"], x, 1, impl), groups))
         if s == 2 and h.shape[1] >= 2:       # skip pool once spatially flat
             h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
         return h
     if kind == "fire":
         sq = jax.nn.relu(groupnorm(params["gn"],
-                                   conv(params["squeeze"], x, 1), groups))
-        h = jnp.concatenate([jax.nn.relu(conv(params["e1"], sq, 1)),
-                             jax.nn.relu(conv(params["e3"], sq, 1))], -1)
+                                   conv(params["squeeze"], x, 1, impl),
+                                   groups))
+        h = jnp.concatenate([jax.nn.relu(conv(params["e1"], sq, 1, impl)),
+                             jax.nn.relu(conv(params["e3"], sq, 1, impl))], -1)
         if s == 2 and h.shape[1] >= 2:
             h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
@@ -195,8 +238,9 @@ def unit_meta(cfg: CNNConfig) -> List[Tuple[str, dict]]:
 
 
 def cnn_apply_units(cfg: CNNConfig, metas, params_list, x):
+    impl = resolve_conv_impl(cfg.conv_impl)
     for (kind, meta), p in zip(metas, params_list):
-        x = _unit_apply(kind, meta, p, x, cfg.groups)
+        x = _unit_apply(kind, meta, p, x, cfg.groups, impl)
     return x
 
 
@@ -230,8 +274,10 @@ def cnn_surrogate_defs(cfg: CNNConfig, block_bounds: List[Tuple[int, int]]):
 
 
 def cnn_apply_surrogates(cfg: CNNConfig, sur_params, x):
+    impl = resolve_conv_impl(cfg.conv_impl)
     for p in sur_params:
-        x = jax.nn.relu(groupnorm(p["gn"], conv(p["conv"], x, 2), cfg.groups))
+        x = jax.nn.relu(groupnorm(p["gn"], conv(p["conv"], x, 2, impl),
+                                  cfg.groups))
     return x
 
 

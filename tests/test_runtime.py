@@ -175,6 +175,64 @@ def test_backend_matrix_matches_sequential(setup, backend, request):
                                float(m["mean_local_loss"]), rtol=1e-4)
 
 
+# --------------------------------------------------------------------------- #
+# fused-path matrix (ISSUE 6): every backend running the Pallas nHSIC in the
+# loss (use_hsic_kernel=True, interpret mode on CPU) and — for the CNN — the
+# im2col conv path, against the sequential reference running the *naive*
+# paths (jnp Grams + lax convs), at the same tolerance as the plain matrix.
+# --------------------------------------------------------------------------- #
+_FUSED_REF = {}
+
+
+def _fused_reference(setup, request):
+    """Per-setup cache: naive-path sequential reference + fused adapter."""
+    if setup not in _FUSED_REF:
+        import dataclasses
+
+        adapter, params, batchers = request.getfixturevalue(setup)
+        if adapter.kind == "cnn":
+            ref_ad = make_adapter(
+                dataclasses.replace(adapter.cfg, conv_impl="lax"),
+                adapter.plan.num_stages)
+            fused_ad = make_adapter(
+                dataclasses.replace(adapter.cfg, conv_impl="im2col"),
+                adapter.plan.num_stages)
+        else:
+            ref_ad = fused_ad = adapter          # transformer has no convs
+        opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
+        hp_fused = CurriculumHP(mu=0.01, use_hsic_kernel=True)
+        stack = stack_round(batchers, range(len(batchers)), local_epochs=1)
+        seq = SequentialRuntime(ref_ad, opt, CurriculumHP(mu=0.01))
+        _FUSED_REF[setup] = (fused_ad, params, opt, hp_fused, stack,
+                             seq.run_stacked(params, 1, stack))
+    return _FUSED_REF[setup]
+
+
+@pytest.mark.parametrize("backend", [
+    pytest.param(b, marks=(needs_multidevice,) if b.endswith("-2d") else ())
+    for b in sorted(_MATRIX_BACKENDS)])
+@pytest.mark.parametrize("setup", ["cnn_setup", "tx_setup"])
+def test_fused_backend_matrix_matches_reference(setup, backend, request):
+    fused_ad, params, opt, hp, stack, (tr_ref, m_ref) = \
+        _fused_reference(setup, request)
+    rt = _MATRIX_BACKENDS[backend](fused_ad, opt, hp)
+    tr, m = rt.run_stacked(params, 1, stack)
+    _assert_trees_equal(tr_ref, tr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(m_ref["mean_local_loss"]),
+                               float(m["mean_local_loss"]), rtol=1e-4)
+
+
+@pytest.mark.parametrize("setup", ["cnn_setup", "tx_setup"])
+def test_fused_sequential_matches_reference(setup, request):
+    """The fused paths must also agree *within* the sequential backend, so a
+    matrix failure cleanly separates kernel-vs-reference drift from
+    cross-backend drift."""
+    fused_ad, params, opt, hp, stack, (tr_ref, m_ref) = \
+        _fused_reference(setup, request)
+    tr, m = SequentialRuntime(fused_ad, opt, hp).run_stacked(params, 1, stack)
+    _assert_trees_equal(tr_ref, tr, rtol=1e-4, atol=1e-5)
+
+
 def test_sharded_matches_vectorized(cnn_setup):
     adapter, params, batchers = cnn_setup
     opt = sgd(0.05, momentum=0.9, weight_decay=5e-4)
