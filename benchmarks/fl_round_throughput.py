@@ -10,6 +10,12 @@ cohort batch stack (data pipeline excluded), for the paper's CNN
 
   PYTHONPATH=src python -m benchmarks.fl_round_throughput [--cohorts 16]
 
+``--population 1e2 .. 1e6`` instead sweeps the *population* axis on the
+streaming fleet (``federated.devices.Fleet`` + procedural client bank):
+full NeuLite rounds at a fixed cohort size, reporting rounds/sec, the
+Python-heap peak of server construction + one round, and process maxrss —
+the numbers that must stay flat when round opening is O(cohort).
+
 ``--runtime async`` instead reports the stateful buffered-async (FedBuff)
 server over ``--rounds`` rounds on an absolute virtual clock: cohorts
 deliver deltas at ``steps / speed`` under a heterogeneous device-tier
@@ -186,6 +192,88 @@ def bench_model_parallel(kind: str, model_parallel: int,
     return out
 
 
+def bench_population(populations, clients_per_round: int = 8,
+                     rounds: int = 8, seed: int = 0,
+                     selection: str = "random"):
+    """Server-side round cost vs *population* size on the streaming fleet.
+
+    Each row opens a ``NeuLiteServer`` over a ``Fleet`` + procedural
+    client bank of ``population`` devices and times full rounds (selection
+    + local training + aggregation) at a FIXED cohort size — with O(cohort)
+    round opening, rounds/sec and server memory must stay flat from 10^2
+    to 10^6 clients.  Reports rounds/sec, the tracemalloc peak of server
+    construction + one round (Python-heap allocations, which is where an
+    O(population) scan would show), and the process ``ru_maxrss``.
+    """
+    import gc
+    import resource
+    import time
+    import tracemalloc
+
+    from repro.configs.paper_models import resnet18
+    from repro.core import make_adapter
+    from repro.core.memory import estimate_stage_memory
+    from repro.data import ProceduralClients
+    from repro.federated import FLConfig, Fleet, NeuLiteServer
+
+    cfg = resnet18(num_classes=10, image_size=8, width_mult=0.0625)
+    adapter = make_adapter(cfg, num_stages=4)
+    # budget the fleet against the PEAK per-stage requirement (this tiny
+    # config's stage footprints exceed full-model training, so the default
+    # full-model budget would leave every stage infeasible): the top tier
+    # (1.10x budget, jitter >= 0.9) then fits every stage by construction,
+    # and stratified tiers guarantee those devices exist at any population
+    max_req = max(estimate_stage_memory(adapter, t, 4, seq=0).total
+                  for t in range(4))
+    budget = int(max_req / 0.99) + 1
+    rows = []
+    for pop in populations:
+        pop = int(pop)
+        flc = FLConfig(n_devices=pop, clients_per_round=clients_per_round,
+                       local_epochs=1, batch_size=4, num_stages=4,
+                       seed=seed, runtime="vectorized", selection=selection)
+        # fixed shard size -> stable cohort shapes, so jit compiles once
+        # per stage and the timed window measures rounds, not tracing;
+        # cache_size=1 -> every population pays the same per-cohort data
+        # derivation (a warm LRU would hand small populations an edge that
+        # has nothing to do with round-opening cost)
+        bank = ProceduralClients(seed, pop, batch_size=flc.batch_size,
+                                 samples_per_client=16, cache_size=1)
+        srv = NeuLiteServer(adapter, bank, flc,
+                            fleet=Fleet(seed, pop, budget))
+        warm = flc.num_stages                  # one full stage cycle
+        for r in range(warm):                  # jit warmup, outside timing
+            srv.run_round(r)
+        t0 = time.perf_counter()
+        for r in range(warm, warm + rounds):
+            srv.run_round(r)
+        dt = (time.perf_counter() - t0) / rounds
+
+        # memory probe separated from timing (tracemalloc taxes every
+        # Python allocation): fresh server, one round, peak heap growth
+        del srv
+        gc.collect()
+        tracemalloc.start()
+        srv = NeuLiteServer(adapter, ProceduralClients(
+            seed, pop, batch_size=flc.batch_size, samples_per_client=16,
+            cache_size=1), flc, fleet=Fleet(seed, pop, budget))
+        srv.run_round(0)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        del srv
+        gc.collect()
+        rows.append({
+            "population": pop,
+            "clients_per_round": clients_per_round,
+            "selection": selection,
+            "rounds_per_s": 1.0 / dt,
+            "server_peak_mb": peak / 2 ** 20,
+            "ru_maxrss_mb": resource.getrusage(
+                resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+        })
+    return rows
+
+
 def bench_conv_impl(num_cohorts: int = 16, batch_size: int = 4,
                     local_steps: int = 2, stage: int = 1, iters: int = 3,
                     use_hsic_kernel: bool = False):
@@ -214,6 +302,23 @@ def bench_conv_impl(num_cohorts: int = 16, batch_size: int = 4,
     return out
 
 
+def _merge_bench_json(payload: dict) -> str:
+    """Update keys of ``BENCH_fl_round.json`` in place, so a population
+    sweep and the backend-throughput run compose into one snapshot instead
+    of clobbering each other."""
+    import json
+
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fl_round.json")
+    doc = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+        doc.pop("meta", None)              # re-stamped by write_bench_json
+    doc.update(payload)
+    return write_bench_json("fl_round", doc)
+
+
 def quick():
     rows = {}
     for kind in ("cnn", "transformer"):
@@ -231,8 +336,16 @@ def quick():
     csv_row("fl_round_conv_crossover", 1e6 / cross["im2col"],
             f"im2col {cross['im2col']:.2f}r/s vs lax {cross['lax']:.2f}r/s "
             f"x{cross['speedup']:.2f}")
-    write_bench_json("fl_round", {"rounds_per_s": rows,
-                                  "conv_impl_crossover_cnn": cross})
+    # streaming-fleet smoke: round cost must not grow with the population
+    sweep = bench_population([1e2, 1e4], rounds=1)
+    for row in sweep:
+        csv_row(f"fl_round_pop_{row['population']}",
+                1e6 / row["rounds_per_s"],
+                f"{row['rounds_per_s']:.2f}r/s "
+                f"{row['server_peak_mb']:.1f}MBpeak")
+    _merge_bench_json({"rounds_per_s": rows,
+                       "conv_impl_crossover_cnn": cross,
+                       "population_sweep_quick": sweep})
 
 
 def main():
@@ -260,7 +373,31 @@ def main():
     ap.add_argument("--rounds", type=int, default=2,
                     help="async: stateful server rounds (stragglers carry "
                          "across round boundaries)")
+    ap.add_argument("--population", type=float, nargs="+", default=None,
+                    metavar="N",
+                    help="streaming-fleet sweep: time full rounds at these "
+                         "population sizes (e.g. --population 1e2 1e3 1e4 "
+                         "1e5 1e6) at a fixed cohort; writes the "
+                         "population_sweep rows of BENCH_fl_round.json")
+    ap.add_argument("--selection", choices=["random", "tifl", "oort"],
+                    default="random",
+                    help="cohort policy for the --population sweep")
     args = ap.parse_args()
+    if args.population:
+        print(f"{'population':>10s} {'rounds/s':>9s} {'peak MB':>8s} "
+              f"{'maxrss MB':>9s}")
+        sweep = bench_population(args.population,
+                                 selection=args.selection)
+        for row in sweep:
+            print(f"{row['population']:10d} {row['rounds_per_s']:9.2f} "
+                  f"{row['server_peak_mb']:8.1f} "
+                  f"{row['ru_maxrss_mb']:9.1f}")
+        base, last = sweep[0], sweep[-1]
+        print(f"rounds/s at {last['population']} = "
+              f"{last['rounds_per_s'] / base['rounds_per_s']:.2f}x of "
+              f"{base['population']}")
+        _merge_bench_json({"population_sweep": sweep})
+        return
     if args.runtime == "async":
         # async x sharded composition: --model-parallel K runs the async
         # local program + buffered flushes on the 2-D (data, model) mesh

@@ -7,7 +7,17 @@ participation rate under the memory wall while the exclusive baselines
 drop most devices.
 
   PYTHONPATH=src python examples/federated_heterogeneous.py
+
+Environment knobs (CI smoke / quick experiments):
+
+  FEDHET_ROUNDS=N          round budget (default 6)
+  FEDHET_SELECTION=POLICY  run ONLY NeuLite with that cohort policy
+                           ("random" | "tifl" | "oort") — skips the
+                           baseline race, exercising FLConfig.selection
+                           end-to-end in seconds
 """
+import os
+
 import numpy as np
 
 from repro.core import make_adapter
@@ -16,7 +26,8 @@ from repro.federated.baselines import DepthFL, ExclusiveFL, FedAvg
 from repro.federated.server import FLConfig, NeuLiteServer
 from repro.models.cnn import CNNConfig
 
-ROUNDS = 6
+ROUNDS = int(os.environ.get("FEDHET_ROUNDS", "6"))
+SELECTION = os.environ.get("FEDHET_SELECTION", "")
 ds = make_image_dataset(0, 3000, num_classes=10, image_size=16)
 test = make_image_dataset(1, 512, num_classes=10, image_size=16)
 parts = dirichlet_partition(0, ds.labels, 30, alpha=1.0)
@@ -27,19 +38,22 @@ ccfg = CNNConfig(name="resnet18", arch="resnet18", image_size=16,
 # loop — right for this CPU-scale CNN), "vectorized" (whole cohort as one
 # jitted program), "sharded" (cohort axis over a device mesh), or "async"
 # (FedBuff-style buffered rounds — see examples/async_fedbuff.py).
+# selection picks the round-open cohort policy over the streaming fleet:
+# "random" (the paper's memory-feasible uniform rule), "tifl", or "oort".
 flc = FLConfig(n_devices=30, clients_per_round=5, local_epochs=1,
                batch_size=32, num_stages=4, seed=0, rounds_per_stage=2,
-               runtime="sequential")
+               runtime="sequential", selection=SELECTION or "random")
 
-print("== NeuLite (progressive, curriculum, co-adaptation) ==")
+print(f"== NeuLite (progressive, curriculum, selection={flc.selection}) ==")
 srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients, flc,
                     test_batcher=Batcher(test, 128, kind="image"))
 hist = srv.run(ROUNDS, log_every=1)
 print(f"NeuLite: acc={hist[-1].test_acc:.3f} "
       f"participation={srv.participation_rate:.0%}\n")
 
-for cls in (FedAvg, ExclusiveFL, DepthFL):
-    b = cls(ccfg, clients, Batcher(test, 128, kind="image"), flc)
-    res = b.run(ROUNDS)
-    print(f"{res.name:12s}: acc={res.accuracies[-1]:.3f} "
-          f"participation={res.participation_rate:.0%}")
+if not SELECTION:
+    for cls in (FedAvg, ExclusiveFL, DepthFL):
+        b = cls(ccfg, clients, Batcher(test, 128, kind="image"), flc)
+        res = b.run(ROUNDS)
+        print(f"{res.name:12s}: acc={res.accuracies[-1]:.3f} "
+              f"participation={res.participation_rate:.0%}")

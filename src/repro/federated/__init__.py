@@ -2,20 +2,26 @@ from repro.federated.aggregation import (buffered_flush_average,
                                          staleness_discount,
                                          stacked_weighted_average,
                                          weighted_average)
-from repro.federated.devices import DeviceProfile, sample_devices
+from repro.federated.devices import (DeviceProfile, Fleet, MaterializedFleet,
+                                     sample_devices)
 from repro.federated.runtime import (AsyncBufferedRuntime, AsyncServerState,
                                      BufferEntry, ClientRuntime, Flush,
                                      RoundOutcome, SequentialRuntime,
                                      ShardedRuntime, VectorizedRuntime,
                                      make_runtime, plan_flushes)
-from repro.federated.selection import (memory_feasible, oort_select,
-                                       random_select, tifl_select)
+from repro.federated.selection import (OortPolicy, RandomPolicy,
+                                       SelectionPolicy, TiFLPolicy,
+                                       make_policy, memory_feasible,
+                                       oort_select, random_select,
+                                       tifl_select)
 from repro.federated.server import FLConfig, NeuLiteServer, RoundResult
 
 __all__ = ["weighted_average", "stacked_weighted_average",
            "staleness_discount", "buffered_flush_average", "DeviceProfile",
-           "sample_devices",
+           "Fleet", "MaterializedFleet", "sample_devices",
            "memory_feasible", "random_select", "tifl_select", "oort_select",
+           "SelectionPolicy", "RandomPolicy", "TiFLPolicy", "OortPolicy",
+           "make_policy",
            "FLConfig", "NeuLiteServer", "RoundResult", "ClientRuntime",
            "RoundOutcome", "SequentialRuntime", "VectorizedRuntime",
            "ShardedRuntime", "AsyncBufferedRuntime", "AsyncServerState",

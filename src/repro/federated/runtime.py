@@ -859,12 +859,21 @@ class AsyncBufferedRuntime(ClientRuntime):
     def cohort_sim_times(self, stack: RoundStack,
                          cohorts: Optional[Sequence[int]] = None
                          ) -> np.ndarray:
-        """Simulated delivery durations: completed steps / client speed."""
+        """Simulated delivery durations: completed steps / client speed.
+
+        ``client_speeds`` is either an explicit ``{client_id: speed}`` dict
+        or a fleet-like object exposing vectorized ``speeds(ids)`` — the
+        streaming path, so a 10^6-device population never materializes a
+        speed table on the runtime."""
         steps = np.asarray(stack.num_batches, np.float64)
         if self.client_speeds is None or cohorts is None:
             return steps
-        speeds = np.asarray([self.client_speeds.get(c, 1.0)
-                             for c in cohorts], np.float64)
+        if hasattr(self.client_speeds, "speeds"):
+            speeds = np.asarray(self.client_speeds.speeds(list(cohorts)),
+                                np.float64)
+        else:
+            speeds = np.asarray([self.client_speeds.get(c, 1.0)
+                                 for c in cohorts], np.float64)
         return steps / np.maximum(speeds, 1e-9)
 
     def run_stacked(self, params, t: int, stack: RoundStack, *,

@@ -33,10 +33,10 @@ from repro.core.memory import estimate_full_memory, estimate_stage_memory
 from repro.data.loader import Batcher
 from repro.federated import aggregation as agg
 from repro.federated.client import dropout_prob, sample_fault_steps
-from repro.federated.devices import sample_devices
+from repro.federated.devices import Fleet, MaterializedFleet
 from repro.federated.runtime import (AsyncBufferedRuntime, ClientRuntime,
                                      make_runtime)
-from repro.federated.selection import memory_feasible, random_select
+from repro.federated.selection import SelectionPolicy, make_policy
 
 
 @dataclasses.dataclass
@@ -62,6 +62,9 @@ class FLConfig:
                                         # through the fused Pallas kernel
                                         # (interpret mode off-TPU)
     alpha: float = 1.0                  # Dirichlet concentration
+    selection: str = "random"           # round-open cohort policy over the
+                                        # streaming fleet: random | tifl |
+                                        # oort (federated.selection)
     seed: int = 0
     runtime: str = "sequential"         # sequential | vectorized | sharded
                                         # | async
@@ -103,10 +106,22 @@ class RoundResult:
 
 
 class NeuLiteServer:
-    def __init__(self, adapter, client_datasets: List, flc: FLConfig,
+    """``client_datasets`` is either a materialized list of per-client
+    datasets (wrapped into ``Batcher``s — the paper-scale path) or a lazy
+    batcher bank (``data.partition.ProceduralClients`` or anything with
+    ``bank[cid] -> Batcher`` and ``len``) for populations too large to
+    materialize.  ``fleet`` overrides the streaming device fleet (e.g. a
+    ``MaterializedFleet`` over externally profiled devices); by default a
+    ``Fleet(flc.seed, flc.n_devices, full_model_bytes)`` is derived — the
+    server never holds per-device state, so its memory is O(cohort) in the
+    population.  ``selection_policy`` overrides ``flc.selection``."""
+
+    def __init__(self, adapter, client_datasets, flc: FLConfig,
                  test_batcher: Optional[Batcher] = None,
                  data_kind: str = "image",
-                 runtime: Union[str, ClientRuntime, None] = None):
+                 runtime: Union[str, ClientRuntime, None] = None,
+                 fleet: Optional[Fleet] = None,
+                 selection_policy: Optional[SelectionPolicy] = None):
         self.adapter = adapter
         self.flc = flc
         self.rng = np.random.default_rng(flc.seed)
@@ -130,9 +145,14 @@ class NeuLiteServer:
         self.runtime = make_runtime(spec, adapter, self.optimizer, self.hp,
                                     **rt_kwargs)
         self.test_batcher = test_batcher
-        self.batchers = [Batcher(ds, flc.batch_size, seed=flc.seed + i,
-                                 kind=data_kind)
-                         for i, ds in enumerate(client_datasets)]
+        if isinstance(client_datasets, (list, tuple)):
+            self.batchers = [Batcher(ds, flc.batch_size, seed=flc.seed + i,
+                                     kind=data_kind)
+                             for i, ds in enumerate(client_datasets)]
+        else:
+            # lazy bank: bank[cid] -> Batcher, derived on demand — a 10^6
+            # population never materializes datasets on the server
+            self.batchers = client_datasets
         T = adapter.plan.num_stages
         if not flc.co_adaptation:
             self.schedule = SequentialSchedule(T, flc.rounds_per_stage)
@@ -144,13 +164,39 @@ class NeuLiteServer:
             self.schedule = SequentialSchedule(T, flc.rounds_per_stage)
         full_mem = estimate_full_memory(adapter, flc.batch_size,
                                         seq=self._seq_len())
-        self.devices = sample_devices(flc.seed, flc.n_devices, full_mem.total)
+        self.fleet = (fleet if fleet is not None
+                      else Fleet(flc.seed, flc.n_devices, full_mem.total))
+        self.selector = (selection_policy if selection_policy is not None
+                         else make_policy(flc.selection))
+        self._devices = None
         if (isinstance(self.runtime, AsyncBufferedRuntime)
                 and self.runtime.client_speeds is None):
-            # the fleet's heterogeneous speeds drive the virtual clock
-            self.runtime.client_speeds = {d.device_id: d.speed
-                                          for d in self.devices}
+            # the fleet's heterogeneous speeds drive the virtual clock;
+            # arrivals are sampled from the FULL population each round, so
+            # the runtime gets the fleet itself (O(1) state), not a dict
+            self.runtime.client_speeds = self.fleet
         self.history: List[RoundResult] = []
+
+    @property
+    def devices(self):
+        """Materialized ``DeviceProfile`` list — compatibility view for
+        list-shaped consumers (O(population): lazy, never built by the
+        round loop)."""
+        if self._devices is None:
+            self._devices = self.fleet.profiles(range(self.fleet.n_devices))
+        return self._devices
+
+    @devices.setter
+    def devices(self, profiles):
+        # injecting an explicit profile list (e.g. table2 reuses a smaller
+        # model's budgets to deepen the memory wall) must reach selection,
+        # so it replaces the fleet wholesale, not just the compat view
+        new_fleet = MaterializedFleet(profiles)
+        if (isinstance(self.runtime, AsyncBufferedRuntime)
+                and self.runtime.client_speeds is self.fleet):
+            self.runtime.client_speeds = new_fleet
+        self.fleet = new_fleet
+        self._devices = list(profiles)
 
     # ------------------------------------------------------------------ #
     def _seq_len(self) -> int:
@@ -175,8 +221,8 @@ class NeuLiteServer:
             # them instead of stranding them in the buffer for the run
             state.drop_retired_stages(t)
         req = self.stage_mem_requirement(t)
-        feasible = memory_feasible(self.devices, req)
-        selected = random_select(self.rng, feasible, flc.clients_per_round)
+        selected, n_feasible = self.selector.select(
+            self.rng, self.fleet, flc.clients_per_round, req, r)
 
         if selected:
             faults = None
@@ -205,9 +251,14 @@ class NeuLiteServer:
                 # only buffered), never the slowest straggler
                 sim_times = [out.round_sim_time]
             else:
-                dev_map = {d.device_id: d for d in self.devices}
-                sim_times = [nb / dev_map[cid].speed
-                             for cid, nb in zip(selected, out.num_batches)]
+                speeds = self.fleet.speeds(selected)
+                sim_times = [nb / s
+                             for s, nb in zip(speeds, out.num_batches)]
+            # feed the round's per-cohort losses back to the policy (Oort's
+            # statistical utility); losses arrive in selected-cohort order
+            self.selector.observe(
+                selected,
+                np.asarray(out.cohort_losses)[:len(selected)], r)
         else:
             upload, mean_loss, sim_times = 0, float("nan"), []
 
@@ -219,7 +270,7 @@ class NeuLiteServer:
             self.schedule.observe(r, mean_loss)
 
         rr = RoundResult(round_idx=r, stage=t, n_selected=len(selected),
-                         n_feasible=len(feasible), mean_loss=mean_loss,
+                         n_feasible=n_feasible, mean_loss=mean_loss,
                          upload_bytes=upload,
                          sim_time=float(max(sim_times)) if sim_times else 0.0,
                          test_acc=acc,

@@ -1,0 +1,173 @@
+"""Streaming fleet (federated.devices.Fleet) unit + regression tests.
+
+The fleet's contract: any device's profile is a stateless function of
+``(seed, n_devices, device_id)`` — order- and history-independent — tiers
+hold their exact population share at every fleet size, memory feasibility
+is decided analytically per tier, and cohorts sample at O(cohort) cost
+from populations far too large to materialize.
+"""
+import numpy as np
+import pytest
+
+from repro.common.prng import hash_u64, permute_index, uniform01
+from repro.federated.devices import (_SCAN_THRESHOLD, DeviceProfile, Fleet,
+                                     MaterializedFleet, sample_devices)
+
+FULL = 10_000_000
+
+
+# --------------------------------------------------------------------------- #
+# counter PRNG
+# --------------------------------------------------------------------------- #
+def test_hash_streams_independent_and_deterministic():
+    ids = np.arange(100)
+    a = hash_u64(7, ids, stream=0)
+    assert np.array_equal(a, hash_u64(7, ids, stream=0))
+    assert not np.array_equal(a, hash_u64(7, ids, stream=1))
+    assert not np.array_equal(a, hash_u64(8, ids, stream=0))
+    u = uniform01(7, ids)
+    assert np.all((u >= 0) & (u < 1))
+
+
+def test_permute_index_is_bijection_with_random_access():
+    for n in [1, 2, 3, 17, 256, 1000]:
+        full = permute_index(3, np.arange(n), n)
+        assert sorted(full.tolist()) == list(range(n))
+        # random access: looking up a subset returns the same entries
+        sub = permute_index(3, np.arange(0, n, 3), n)
+        assert np.array_equal(full[::3], sub)
+
+
+# --------------------------------------------------------------------------- #
+# fleet determinism
+# --------------------------------------------------------------------------- #
+def test_profiles_order_and_history_independent():
+    f = Fleet(0, 1000, FULL)
+    fwd = f.profiles(range(1000))
+    g = Fleet(0, 1000, FULL)
+    g.profile(999)                      # query history must not matter
+    bwd = g.profiles(range(999, -1, -1))[::-1]
+    assert fwd == bwd
+
+
+def test_sample_devices_matches_fleet_lookups():
+    profs = sample_devices(5, 64, FULL)
+    f = Fleet(5, 64, FULL)
+    assert profs == f.profiles(range(64))
+    assert [d.device_id for d in profs] == list(range(64))
+
+
+def test_model_size_changes_budgets_not_tiers_or_speeds():
+    """Regression: same (seed, n_devices) under a different
+    full_model_bytes must keep every device's tier and speed — only the
+    memory budgets rescale.  (The old sequential-RNG implementation
+    re-dealt the whole fleet.)"""
+    a, b = Fleet(11, 200, FULL), Fleet(11, 200, 3 * FULL)
+    ids = np.arange(200)
+    assert np.array_equal(a.tier_of(ids), b.tier_of(ids))
+    assert np.allclose(a.speeds(ids), b.speeds(ids))
+    # budgets scale exactly with the model (int truncation aside)
+    assert np.allclose(b.mem_bytes(ids), 3 * a.mem_bytes(ids), atol=4)
+    assert not np.array_equal(a.mem_bytes(ids), b.mem_bytes(ids))
+
+
+def test_tiers_are_stratified_at_any_population():
+    for n in [10, 100, 1000]:
+        f = Fleet(0, n, FULL)
+        counts = np.bincount(f.tier_of(np.arange(n)), minlength=f.n_tiers)
+        ideal = f.tier_fracs * n
+        assert np.all(np.abs(counts - ideal) <= 1), (n, counts)
+
+
+# --------------------------------------------------------------------------- #
+# analytic feasibility
+# --------------------------------------------------------------------------- #
+def test_feasible_fraction_matches_empirical():
+    n = 4000
+    f = Fleet(0, n, FULL)
+    mem = f.mem_bytes(np.arange(n))
+    for req in [0, FULL // 4, FULL // 2, FULL, 2 * FULL]:
+        emp = np.count_nonzero(mem >= req) / n
+        assert abs(f.feasible_fraction(req) - emp) < 0.03, req
+    assert f.feasible_fraction(0) == 1.0
+    assert f.feasible_fraction(10 * FULL) == 0.0
+
+
+def test_feasible_count_exact_below_threshold():
+    f = Fleet(0, 500, FULL)
+    mem = f.mem_bytes(np.arange(500))
+    req = FULL // 2
+    assert f.feasible_count(req) == int(np.count_nonzero(mem >= req))
+
+
+# --------------------------------------------------------------------------- #
+# cohort sampling
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n", [100, _SCAN_THRESHOLD * 4])
+def test_sample_cohort_feasible_and_distinct(n):
+    f = Fleet(0, n, FULL)
+    rng = np.random.default_rng(0)
+    req = FULL // 2
+    c = f.sample_cohort(rng, 10, req)
+    assert len(c) == 10 and len(set(c)) == 10
+    assert np.all(f.mem_bytes(c) >= req)
+    assert all(0 <= i < n for i in c)
+
+
+def test_sample_cohort_infeasible_returns_empty():
+    f = Fleet(0, 10 ** 6, FULL)
+    assert f.sample_cohort(np.random.default_rng(0), 5, 10 * FULL) == []
+
+
+def test_sample_cohort_tier_restriction():
+    f = Fleet(0, 10 ** 5, FULL)
+    rng = np.random.default_rng(0)
+    c = f.sample_cohort(rng, 8, 0, tier=3)
+    assert len(c) == 8
+    assert np.all(f.tier_of(c) == 3)
+
+
+def test_sample_cohort_million_population_is_fast_and_lazy():
+    import time
+    f = Fleet(0, 10 ** 6, FULL)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    c = f.sample_cohort(rng, 16, FULL // 2)
+    assert len(c) == 16
+    # generous bound: rejection sampling is O(k/p); a population scan at
+    # this size costs ~100ms+ in numpy and would trip this
+    assert time.perf_counter() - t0 < 0.25
+
+
+# --------------------------------------------------------------------------- #
+# materialized fleet equivalence
+# --------------------------------------------------------------------------- #
+def test_materialized_fleet_mirrors_streaming_fleet():
+    n = 300
+    f = Fleet(0, n, FULL)
+    m = MaterializedFleet(f.profiles(range(n)), full_model_bytes=FULL)
+    ids = np.arange(n)
+    assert np.array_equal(m.mem_bytes(ids), f.mem_bytes(ids))
+    assert np.allclose(m.speeds(ids), f.speeds(ids))
+    req = FULL // 2
+    assert m.feasible_count(req) == f.feasible_count(req)
+    # same RNG state -> identical cohorts (shared sampling implementation)
+    ca = f.sample_cohort(np.random.default_rng(3), 12, req)
+    cb = m.sample_cohort(np.random.default_rng(3), 12, req)
+    assert ca == cb
+
+
+def test_materialized_fleet_rejects_gappy_ids():
+    profs = [DeviceProfile(device_id=i, mem_bytes=100, speed=1.0)
+             for i in (0, 2, 3)]
+    with pytest.raises(ValueError):
+        MaterializedFleet(profs)
+
+
+def test_materialized_fleet_speed_tiers():
+    profs = sample_devices(0, 250, FULL)
+    m = MaterializedFleet(profs, full_model_bytes=FULL)
+    tiers = m.tier_of(np.arange(250))
+    speeds = m.speeds(np.arange(250))
+    # quintile tiering: every tier-0 device at most as fast as any tier-4
+    assert speeds[tiers == 0].max() <= speeds[tiers == m.n_tiers - 1].min()

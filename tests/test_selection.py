@@ -1,0 +1,289 @@
+"""Selection policies: functional API units, policy classes over the
+streaming fleet, and streaming-vs-materialized server equivalence.
+
+The tifl credit contract is regression-tested here: credits are spent
+only when a tier actually yields clients, never go negative, and an
+all-exhausted table replenishes deterministically instead of deadlocking.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_adapter
+from repro.data import (ProceduralClients, dirichlet_partition,
+                        make_image_dataset)
+from repro.federated.devices import (DeviceProfile, Fleet, MaterializedFleet,
+                                     sample_devices)
+from repro.federated.selection import (OortPolicy, OortState, RandomPolicy,
+                                       TiFLPolicy, make_policy,
+                                       memory_feasible, oort_select,
+                                       oort_update, random_select,
+                                       tifl_select)
+from repro.federated.server import FLConfig, NeuLiteServer
+from repro.models.cnn import CNNConfig
+
+needs_multidevice = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices "
+           "(run with XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _devices(n=20, seed=0):
+    return sample_devices(seed, n, 10_000_000)
+
+
+# --------------------------------------------------------------------------- #
+# memory_feasible / random_select
+# --------------------------------------------------------------------------- #
+def test_memory_feasible_thresholds():
+    devs = [DeviceProfile(0, 100, 1.0), DeviceProfile(1, 200, 1.0),
+            DeviceProfile(2, 300, 1.0)]
+    assert memory_feasible(devs, 0) == [0, 1, 2]
+    assert memory_feasible(devs, 200) == [1, 2]       # boundary inclusive
+    assert memory_feasible(devs, 201) == [2]
+    assert memory_feasible(devs, 1000) == []
+
+
+def test_random_select_is_subset_without_replacement():
+    rng = np.random.default_rng(0)
+    sel = random_select(rng, list(range(10)), 4)
+    assert len(sel) == len(set(sel)) == 4
+    assert random_select(rng, [], 4) == []
+    assert len(random_select(rng, [1, 2], 5)) == 2
+
+
+# --------------------------------------------------------------------------- #
+# tifl_select credit contract (regression)
+# --------------------------------------------------------------------------- #
+def test_tifl_empty_candidates_cost_no_credit():
+    devs = _devices()
+    credits = {t: 3 for t in range(5)}
+    before = dict(credits)
+    out = tifl_select(np.random.default_rng(0), devs, [], 4,
+                      credits=credits)
+    assert out == []
+    assert credits == before
+
+
+def test_tifl_zero_k_costs_no_credit():
+    devs = _devices()
+    credits = {t: 3 for t in range(5)}
+    before = dict(credits)
+    out = tifl_select(np.random.default_rng(0), devs,
+                      [d.device_id for d in devs], 0, credits=credits)
+    assert out == []
+    assert credits == before
+
+
+def test_tifl_exhausted_credits_replenish_deterministically():
+    devs = _devices()
+    cand = [d.device_id for d in devs]
+    credits = {t: 0 for t in range(5)}
+    out = tifl_select(np.random.default_rng(0), devs, cand, 4,
+                      credits=credits)
+    assert out, "replenish must keep the policy selecting"
+    assert all(v >= 0 for v in credits.values())
+
+
+def test_tifl_credits_never_go_negative():
+    devs = _devices()
+    cand = [d.device_id for d in devs]
+    credits = {t: 1 for t in range(5)}
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        sel = tifl_select(rng, devs, cand, 3, credits=credits)
+        assert sel
+        assert all(v >= 0 for v in credits.values()), credits
+    # credits were actually consumed and replenished along the way
+    assert max(credits.values()) <= 1
+
+
+def test_tifl_selects_within_one_speed_tier():
+    devs = _devices(50)
+    cand = [d.device_id for d in devs]
+    speeds = {d.device_id: d.speed for d in devs}
+    sel = tifl_select(np.random.default_rng(1), devs, cand, 5)
+    picked = sorted(speeds[c] for c in sel)
+    # one tier of 10 devices: the spread inside a quintile is far below
+    # the fleet-wide spread
+    others = sorted(speeds.values())
+    assert picked[-1] - picked[0] < (others[-1] - others[0]) / 2
+
+
+# --------------------------------------------------------------------------- #
+# oort
+# --------------------------------------------------------------------------- #
+def test_oort_exploits_high_utility_when_greedy():
+    devs = _devices(20)
+    cand = [d.device_id for d in devs]
+    state = OortState(epsilon=0.0, t_desired=10.0)   # no speed penalty
+    for c in cand:
+        oort_update(state, c, 0.1, 0)
+    oort_update(state, 7, 50.0, 0)                   # one standout loss
+    sel = oort_select(np.random.default_rng(0), devs, cand, 3, state, 1)
+    assert 7 in sel
+
+
+def test_oort_staleness_pulls_unvisited_back():
+    devs = _devices(10)
+    cand = [d.device_id for d in devs]
+    state = OortState(epsilon=0.0, t_desired=10.0)
+    for c in cand:
+        oort_update(state, c, 1.0, 0)
+    oort_update(state, 3, 1.0, 40)                   # fresh visit
+    # equal utilities: staleness sqrt(0.1 * rounds-behind) must rank the
+    # long-unvisited devices above the fresh one
+    sel = oort_select(np.random.default_rng(0), devs, cand, 9, state, 41)
+    assert 3 not in sel
+
+
+def test_oort_epsilon_explores_fresh_devices():
+    devs = _devices(20)
+    cand = [d.device_id for d in devs]
+    state = OortState(epsilon=1.0)                   # explore-only
+    for c in cand[:5]:
+        oort_update(state, c, 100.0, 0)
+    rng = np.random.default_rng(0)
+    picked = set()
+    for r in range(20):
+        picked.update(oort_select(rng, devs, cand, 4, state, r))
+    assert picked - set(cand[:5]), "pure exploration never left the seen set"
+
+
+# --------------------------------------------------------------------------- #
+# policy classes over the streaming fleet
+# --------------------------------------------------------------------------- #
+def test_make_policy_resolution():
+    assert isinstance(make_policy("random"), RandomPolicy)
+    assert isinstance(make_policy("tifl"), TiFLPolicy)
+    assert isinstance(make_policy("oort"), OortPolicy)
+    p = OortPolicy(epsilon=0.5)
+    assert make_policy(p) is p
+    with pytest.raises(ValueError):
+        make_policy("fedavg")
+    with pytest.raises(ValueError):
+        make_policy(p, epsilon=0.1)
+
+
+@pytest.mark.parametrize("name", ["random", "tifl", "oort"])
+def test_policies_return_feasible_distinct_cohorts(name):
+    fleet = Fleet(0, 500, 10_000_000)
+    pol = make_policy(name)
+    rng = np.random.default_rng(0)
+    req = 5_000_000
+    for r in range(5):
+        sel, n_feas = pol.select(rng, fleet, 8, req, r)
+        assert len(sel) == len(set(sel)) <= 8
+        assert np.all(fleet.mem_bytes(sel) >= req)
+        assert n_feas == fleet.feasible_count(req)
+        pol.observe(sel, np.linspace(1.0, 2.0, len(sel)), r)
+
+
+def test_oort_policy_exploits_observed_losses():
+    fleet = Fleet(0, 1000, 10_000_000)
+    pol = OortPolicy(epsilon=0.0, t_desired=10.0)
+    rng = np.random.default_rng(0)
+    sel0, _ = pol.select(rng, fleet, 8, 0, 0)
+    losses = np.ones(len(sel0))
+    losses[0] = 99.0                                  # sel0[0] most useful
+    pol.observe(sel0, losses, 0)
+    sel1, _ = pol.select(rng, fleet, 8, 0, 1)
+    assert sel0[0] in sel1
+
+
+def test_tifl_policy_infeasible_returns_empty():
+    fleet = Fleet(0, 1000, 1000)
+    sel, n_feas = TiFLPolicy().select(np.random.default_rng(0), fleet, 8,
+                                      10 ** 9, 0)
+    assert sel == [] and n_feas == 0
+
+
+# --------------------------------------------------------------------------- #
+# server equivalence: streaming fleet vs materialized fleet, all backends
+# --------------------------------------------------------------------------- #
+def _equiv_servers(runtime):
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    ds = make_image_dataset(0, 160, num_classes=4, image_size=8)
+    parts = dirichlet_partition(0, ds.labels, 10, alpha=1.0)
+    clients = [ds.subset(p) for p in parts]
+    flc = FLConfig(n_devices=10, clients_per_round=4, local_epochs=1,
+                   batch_size=16, num_stages=2, seed=0, runtime=runtime,
+                   selection="random", buffer_size=0)
+    streaming = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients,
+                              flc)
+    profs = sample_devices(flc.seed, flc.n_devices,
+                           streaming.fleet.full_model_bytes)
+    materialized = NeuLiteServer(
+        make_adapter(ccfg, flc.num_stages), clients, flc,
+        fleet=MaterializedFleet(
+            profs, full_model_bytes=streaming.fleet.full_model_bytes))
+    return streaming, materialized
+
+
+@pytest.mark.parametrize("runtime", [
+    "sequential", "vectorized",
+    pytest.param("sharded", marks=needs_multidevice), "async"])
+def test_streaming_fleet_reproduces_materialized_rounds(runtime):
+    """With selection="random" and a fixed seed, a server over the
+    streaming fleet and one over the materialized profile list must pick
+    identical cohorts and land identical round results (rtol 1e-4)."""
+    a, b = _equiv_servers(runtime)
+    ha, hb = a.run(4), b.run(4)
+    for x, y in zip(ha, hb):
+        assert x.n_selected == y.n_selected
+        assert x.n_feasible == y.n_feasible
+        assert x.upload_bytes == y.upload_bytes
+        if np.isnan(x.mean_loss):
+            assert np.isnan(y.mean_loss)
+        else:
+            np.testing.assert_allclose(x.mean_loss, y.mean_loss, rtol=1e-4)
+        np.testing.assert_allclose(x.sim_time, y.sim_time, rtol=1e-4)
+
+
+def test_server_runs_selection_policies_end_to_end():
+    """FLConfig.selection drives round opening for every policy, on a
+    procedural client bank (no materialized datasets)."""
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    bank = ProceduralClients(0, 200, batch_size=16, num_classes=4,
+                             image_size=8)
+    for sel in ("random", "tifl", "oort"):
+        flc = FLConfig(n_devices=200, clients_per_round=4, local_epochs=1,
+                       batch_size=16, num_stages=2, seed=0,
+                       runtime="vectorized", selection=sel)
+        srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), bank, flc)
+        hist = srv.run(3)
+        assert any(h.n_selected > 0 for h in hist), sel
+        assert any(np.isfinite(h.mean_loss) for h in hist), sel
+
+
+# --------------------------------------------------------------------------- #
+# selection-policy accuracy race (slow)
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_informed_policies_match_random_at_equal_rounds():
+    """oort/tifl must do no worse than random selection at an equal round
+    budget on the heterogeneous example task (seeded, small margin: the
+    informed policies see the same feasible pool plus utility signal)."""
+    ccfg = CNNConfig(name="r18", arch="resnet18", num_classes=4,
+                     image_size=8, width_mult=0.125)
+    ds = make_image_dataset(0, 640, num_classes=4, image_size=8)
+    test = make_image_dataset(1, 256, num_classes=4, image_size=8)
+    parts = dirichlet_partition(0, ds.labels, 30, alpha=0.5)
+    clients = [ds.subset(p) for p in parts]
+    from repro.data import Batcher
+
+    def acc(selection):
+        flc = FLConfig(n_devices=30, clients_per_round=6, local_epochs=1,
+                       batch_size=16, num_stages=2, seed=0,
+                       runtime="vectorized", selection=selection)
+        srv = NeuLiteServer(make_adapter(ccfg, flc.num_stages), clients,
+                            flc, test_batcher=Batcher(test, 128,
+                                                      kind="image"))
+        hist = srv.run(10)
+        return float(np.mean([h.test_acc for h in hist[-3:]]))
+
+    base = acc("random")
+    for sel in ("tifl", "oort"):
+        assert acc(sel) >= base - 0.02, (sel, base)
