@@ -20,8 +20,18 @@ per-device trainable block shrinks ~2x.
   PYTHONPATH=src python examples/async_fedbuff.py
 
 ``FEDBUFF_ROUNDS`` shrinks the run for CI smoke jobs.
+
+Crash-safety harness (the CI kill-and-resume job): with ``FEDBUFF_CKPT=dir``
+set, only the async leg runs, checkpointing its complete server state every
+2 rounds.  ``FEDBUFF_KILL_AT=k`` SIGKILLs the process right before round k
+(simulated host loss — work past the last checkpoint is lost and must be
+re-run); ``FEDBUFF_RESUME=1`` restores from the newest checkpoint instead
+of starting fresh; ``FEDBUFF_COMPARE=other_dir`` asserts the finished run's
+params, server version, and round history are IDENTICAL to the final
+checkpoint in ``other_dir`` (an uninterrupted reference run).
 """
 import os
+import signal
 
 import jax
 import numpy as np
@@ -40,6 +50,52 @@ ccfg = CNNConfig(name="resnet18", arch="resnet18", num_classes=10,
                  image_size=8, width_mult=0.25)
 base = dict(n_devices=12, clients_per_round=6, local_epochs=1,
             batch_size=16, num_stages=2, seed=0)
+
+CKPT = os.environ.get("FEDBUFF_CKPT")
+if CKPT:
+    # crash-safety harness: async leg only, full server state every 2 rounds
+    kill_at = int(os.environ.get("FEDBUFF_KILL_AT", "-1"))
+    flc = FLConfig(**base, runtime="async", buffer_size=4,
+                   staleness_schedule="polynomial", staleness_alpha=0.5,
+                   dropout_schedule="constant", dropout_rate=0.15,
+                   checkpoint_dir=CKPT, checkpoint_every=2)
+    adapter = make_adapter(ccfg, flc.num_stages)
+    tb = Batcher(test, 128, kind="image")
+    if os.environ.get("FEDBUFF_RESUME"):
+        srv = NeuLiteServer.restore(adapter, clients, flc, CKPT,
+                                    test_batcher=tb)
+        print(f"resumed at round {srv.next_round} "
+              f"(server version {srv.runtime.state.version}, "
+              f"pending {len(srv.runtime.state)})")
+    else:
+        srv = NeuLiteServer(adapter, clients, flc, test_batcher=tb)
+    while srv.next_round < ROUNDS:
+        if srv.next_round == kill_at:
+            print(f"simulating host loss before round {kill_at}", flush=True)
+            os.kill(os.getpid(), signal.SIGKILL)
+        srv.run(1, log_every=1)
+    final_dir = os.path.join(CKPT, "final")
+    srv.save_state(final_dir)
+    print(f"final state -> {final_dir} "
+          f"(server version {srv.runtime.state.version})")
+
+    cmp_dir = os.environ.get("FEDBUFF_COMPARE")
+    if cmp_dir:
+        ref = NeuLiteServer.restore(adapter, clients, flc,
+                                    os.path.join(cmp_dir, "final"),
+                                    test_batcher=tb)
+        for a, b in zip(jax.tree.leaves(ref.params),
+                        jax.tree.leaves(srv.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert ref.runtime.state.version == srv.runtime.state.version, (
+            ref.runtime.state.version, srv.runtime.state.version)
+        assert len(ref.history) == len(srv.history)
+        for ha, hb in zip(ref.history, srv.history):
+            assert ha == hb or (np.isnan(ha.mean_loss)
+                                and np.isnan(hb.mean_loss)), (ha, hb)
+        print("kill-and-resume run matches the uninterrupted reference "
+              "exactly: params, server version, and round history")
+    raise SystemExit(0)
 
 print("== synchronous (vectorized) ==")
 flc = FLConfig(**base, runtime="vectorized")

@@ -1,4 +1,6 @@
-from repro.checkpoint.store import (latest_checkpoint, load_checkpoint,
+from repro.checkpoint.store import (checkpoint_step, latest_checkpoint,
+                                    load_checkpoint, read_checkpoint_meta,
                                     save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint",
+           "checkpoint_step", "read_checkpoint_meta"]

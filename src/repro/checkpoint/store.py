@@ -1,64 +1,226 @@
 """Pytree checkpointing: flat-path .npz files + JSON metadata + rotation.
 
-Layout: <dir>/ckpt_<step>.npz with leaf paths as keys; lists/dicts round-trip
-via the path encoding from ``repro.common.tree``.  The server checkpoints
-{params, round, stage} so progressive training resumes mid-curriculum.
+Layout: ``<dir>/ckpt_<step>.npz`` with leaf paths as keys plus a
+``ckpt_<step>.npz.json`` sidecar; lists/dicts round-trip via the path
+encoding from ``repro.common.tree``.  The server checkpoints its complete
+round-loop state (``NeuLiteServer.save_state``) so a killed run resumes
+exactly.
+
+Durability contract (crash-atomic): both files are written to temp names,
+fsynced, and renamed into place — the JSON sidecar first — so a *visible*
+``ckpt_*.npz`` always implies a complete, consistent (npz, json) pair.  A
+torn file from a pre-atomic writer (or disk corruption) is skipped by
+``latest_checkpoint`` and raises a clean ``ValueError`` from
+``load_checkpoint`` instead of returning garbage.
+
+Dtype contract: leaves round-trip with their exact saved dtype.
+ml_dtypes extension leaves (bf16, f16 is native, float8_*) — which
+``np.savez`` can only store as opaque void (``|V2``) records that
+``jnp.asarray`` rejects — are saved as a raw unsigned-integer *view* with
+the true dtype recorded in the sidecar and re-viewed on load.  64-bit
+leaves come back as numpy arrays when jax's x64 mode is off (``jnp.asarray``
+would silently downcast them to 32 bits); everything else returns as jax
+arrays.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Optional, Tuple
+import tempfile
+import zipfile
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.common.tree import map_with_path
 
+# reserved sidecar key: {"version": ..., "dtypes": {path: true_dtype_name}}
+_STORE_KEY = "__store__"
+_STORE_VERSION = 1
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz")
+
+
+def _raw_view(arr: np.ndarray) -> Tuple[np.ndarray, Optional[str]]:
+    """(savez-safe array, true dtype name when a view was needed).
+
+    ml_dtypes extension dtypes (kind 'V' as numpy sees them) round-trip
+    through ``np.savez`` as unreadable void records — store the raw bits as
+    a same-width unsigned view instead and remember the real dtype.
+    """
+    if arr.dtype.kind == "V":
+        return (arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}")),
+                arr.dtype.name)
+    return arr, None
+
+
+def _true_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)          # ml_dtypes registers its names
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _restore_leaf(arr: np.ndarray, dtype_name: Optional[str]):
+    arr = np.asarray(arr)
+    if dtype_name is not None:
+        arr = arr.view(_true_dtype(dtype_name))
+    if (arr.dtype.kind in "fiu" and arr.dtype.itemsize == 8
+            and not jax.config.jax_enable_x64):
+        # jnp.asarray would silently downcast 64-bit leaves with x64 off;
+        # keep them numpy so the saved dtype (and every bit) survives
+        return arr
+    return jax.numpy.asarray(arr)
+
+
+def _fsync_write(directory: str, suffix: str, write_fn) -> str:
+    """Write via ``write_fn(file)`` to a temp name in ``directory`` and
+    fsync it; returns the temp path (caller ``os.replace``s it visible)."""
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=suffix)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+    except BaseException:
+        os.unlink(tmp)
+        raise
+    return tmp
+
 
 def save_checkpoint(directory: str, step: int, tree, meta: Optional[dict]
                     = None, keep: int = 3) -> str:
+    """Atomically write ``ckpt_<step>.npz`` (+ ``.json`` sidecar) and rotate
+    old checkpoints down to the newest ``keep`` (``keep >= 1``)."""
+    if keep < 1:
+        raise ValueError(
+            f"keep={keep}: must retain at least one checkpoint "
+            f"(keep=0 used to be a silent no-op that deleted nothing)")
     os.makedirs(directory, exist_ok=True)
-    flat = {}
+    flat: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
 
     def visit(p, leaf):
-        flat[p] = np.asarray(leaf)
+        raw, true_name = _raw_view(np.asarray(leaf))
+        flat[p] = raw
+        if true_name is not None:
+            dtypes[p] = true_name
         return leaf
 
     map_with_path(visit, tree)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **flat)
-    if meta is not None:
-        with open(path + ".json", "w") as f:
-            json.dump(meta, f)
+    sidecar = {_STORE_KEY: {"version": _STORE_VERSION, "dtypes": dtypes},
+               "meta": meta}
+    tmp_npz = _fsync_write(directory, ".npz.tmp",
+                           lambda f: np.savez(f, **flat))
+    try:
+        tmp_json = _fsync_write(
+            directory, ".json.tmp",
+            lambda f: f.write(json.dumps(sidecar).encode()))
+    except BaseException:
+        os.unlink(tmp_npz)
+        raise
+    # json first: once the npz becomes visible, its sidecar already exists
+    os.replace(tmp_json, path + ".json")
+    os.replace(tmp_npz, path)
     _rotate(directory, keep)
     return path
 
 
+def _read_sidecar(path: str) -> Tuple[Optional[dict], Dict[str, str]]:
+    """(user meta, dtype map) from the ``.json`` sidecar (legacy sidecars
+    written before the atomic store hold the user meta directly)."""
+    jpath = path + ".json"
+    if not os.path.exists(jpath):
+        return None, {}
+    with open(jpath) as f:
+        parsed = json.load(f)
+    if isinstance(parsed, dict) and _STORE_KEY in parsed:
+        return parsed.get("meta"), parsed[_STORE_KEY].get("dtypes", {})
+    return parsed, {}
+
+
+def read_checkpoint_meta(path: str) -> Optional[dict]:
+    """User metadata of a checkpoint without touching the array payload —
+    the resume path reads this first to *build* the ``like`` structure
+    (e.g. the async buffer's per-stage entry counts) it then loads with."""
+    return _read_sidecar(path)[0]
+
+
 def load_checkpoint(path: str, like) -> Tuple[Any, Optional[dict]]:
-    """``like``: pytree with the target structure (arrays or ShapeDtype)."""
-    data = np.load(path)
-    out = map_with_path(lambda p, leaf: jax.numpy.asarray(data[p]), like)
-    meta = None
-    if os.path.exists(path + ".json"):
-        with open(path + ".json") as f:
-            meta = json.load(f)
+    """``like``: pytree with the target structure (arrays or ShapeDtype).
+
+    Raises ``ValueError`` when the archive is corrupt/truncated or when its
+    leaf paths disagree with ``like`` (naming the missing/extra paths) —
+    instead of silently materializing a partial or mismatched tree.
+    """
+    meta, dtypes = _read_sidecar(path)
+    want = set()
+    map_with_path(lambda p, leaf: want.add(p), like)
+    try:
+        with np.load(path) as data:
+            have = set(data.files)
+            missing = sorted(want - have)
+            extra = sorted(have - want)
+            if missing or extra:
+                raise _StructureMismatch(
+                    f"checkpoint {path!r} does not match the requested "
+                    f"structure: missing leaf paths {missing}, "
+                    f"unexpected leaf paths {extra}")
+            out = map_with_path(
+                lambda p, leaf: _restore_leaf(data[p], dtypes.get(p)), like)
+    except _StructureMismatch:
+        raise
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError, KeyError) as e:
+        raise ValueError(
+            f"corrupt or truncated checkpoint {path!r}: {e}") from e
     return out, meta
 
 
+class _StructureMismatch(ValueError):
+    """like/archive leaf-path disagreement (not file corruption)."""
+
+
+def checkpoint_step(path: str) -> int:
+    """Parse the integer step out of a ``ckpt_<step>.npz`` path."""
+    m = _CKPT_RE.fullmatch(os.path.basename(path))
+    if m is None:
+        raise ValueError(f"not a checkpoint path: {path!r}")
+    return int(m.group(1))
+
+
+def _list_checkpoints(directory: str):
+    """[(step, filename)] sorted by *numeric* step — lexical ordering breaks
+    once ``{step:08d}`` overflows 8 digits (step >= 10^8)."""
+    out = []
+    for p in os.listdir(directory):
+        m = _CKPT_RE.fullmatch(p)
+        if m:
+            out.append((int(m.group(1)), p))
+    return sorted(out)
+
+
 def latest_checkpoint(directory: str) -> Optional[str]:
+    """Newest *complete* checkpoint by numeric step; files that are not
+    readable zip archives (torn pre-atomic writes) are skipped."""
     if not os.path.isdir(directory):
         return None
-    ckpts = sorted(p for p in os.listdir(directory)
-                   if re.fullmatch(r"ckpt_\d+\.npz", p))
-    return os.path.join(directory, ckpts[-1]) if ckpts else None
+    for _, p in reversed(_list_checkpoints(directory)):
+        full = os.path.join(directory, p)
+        if zipfile.is_zipfile(full):
+            return full
+    return None
 
 
 def _rotate(directory: str, keep: int):
-    ckpts = sorted(p for p in os.listdir(directory)
-                   if re.fullmatch(r"ckpt_\d+\.npz", p))
-    for p in ckpts[:-keep]:
+    if keep < 1:
+        raise ValueError(f"keep={keep}: must retain at least one checkpoint")
+    ckpts = _list_checkpoints(directory)
+    for _, p in ckpts[:-keep]:
         os.remove(os.path.join(directory, p))
         j = os.path.join(directory, p + ".json")
         if os.path.exists(j):

@@ -32,6 +32,20 @@ class StageSchedule:
     def observe(self, round_idx: int, metric: float) -> None:
         pass
 
+    # -- checkpoint/resume seam -------------------------------------------- #
+    def state_dict(self) -> dict:
+        """JSON-able mutable state for exact server resume.  Stateless
+        schedules (round-robin / sequential derive the stage from the round
+        index alone) have nothing to persist."""
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state:
+            raise ValueError(
+                f"{type(self).__name__} is stateless but the checkpoint "
+                f"carries schedule state {sorted(state)} — schedule kind "
+                f"mismatch between save and restore")
+
 
 @dataclasses.dataclass
 class RoundRobinSchedule(StageSchedule):
@@ -106,6 +120,19 @@ class PlateauSchedule(StageSchedule):
             self._stage += 1
             self._best, self._bad = None, 0
             self._rounds_in_stage = self._lost = 0
+
+    def state_dict(self) -> dict:
+        return {"stage": self._stage, "best": self._best, "bad": self._bad,
+                "rounds_in_stage": self._rounds_in_stage,
+                "lost": self._lost}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._stage = int(state["stage"])
+        self._best = (None if state["best"] is None
+                      else float(state["best"]))
+        self._bad = int(state["bad"])
+        self._rounds_in_stage = int(state["rounds_in_stage"])
+        self._lost = int(state["lost"])
 
     @property
     def converged_all(self) -> bool:

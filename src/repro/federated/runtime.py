@@ -763,6 +763,96 @@ class AsyncServerState:
             self.clock = max(self.clock, flushes[-1].time)
         return flushes
 
+    # -- checkpoint/resume seam: exact serialization of the buffer --------- #
+    def state_dict(self):
+        """``(arrays, meta)`` for the flat-path checkpoint store.
+
+        The ragged cross-stage ``BufferEntry`` list serializes as one
+        *stacked* delta pytree per stage (entries of the same stage share a
+        trainable-subtree structure) plus per-entry
+        weight/loss/pulled_version/arrival_time/cohort arrays; ``meta``
+        carries the version counter, the absolute clock, and the exact
+        buffer order as a per-entry stage list (order matters — flush
+        planning breaks arrival-time ties by buffer position).  Every entry
+        must hold a materialized delta, which is always true between
+        ``run_round`` calls (only mid-round does a fresh entry briefly use
+        the shared stacked-deltas array).
+        """
+        for e in self.entries:
+            if e.delta is None:
+                raise ValueError(
+                    "cannot serialize AsyncServerState mid-round: a buffer "
+                    "entry has no materialized delta")
+        order = [int(e.stage) for e in self.entries]
+        arrays = {}
+        for t in sorted(set(order)):
+            es = [e for e in self.entries if e.stage == t]
+            arrays[f"stage_{t}"] = {
+                "delta": jax.tree.map(
+                    lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                    *[e.delta for e in es]),
+                "weight": np.asarray([e.weight for e in es], np.float64),
+                "loss": np.asarray([np.asarray(e.loss) for e in es],
+                                   np.float32),
+                "pulled_version": np.asarray([e.pulled_version for e in es],
+                                             np.int64),
+                "arrival_time": np.asarray([e.arrival_time for e in es],
+                                           np.float64),
+                "cohort": np.asarray([e.cohort for e in es], np.int64),
+            }
+        meta = {"version": int(self.version), "clock": float(self.clock),
+                "stages": order}
+        return arrays, meta
+
+    @classmethod
+    def arrays_like(cls, adapter, params, meta):
+        """Structure template (``ShapeDtypeStruct`` leaves) matching
+        ``state_dict``'s arrays for ``checkpoint.load_checkpoint`` — built
+        from the adapter's per-stage trainable subtree shapes and the
+        checkpointed per-entry stage list."""
+        counts: Dict[int, int] = {}
+        for t in meta["stages"]:
+            counts[int(t)] = counts.get(int(t), 0) + 1
+        like = {}
+        for t, n in sorted(counts.items()):
+            trainable = adapter.split_stage(params, t)[1]
+            like[f"stage_{t}"] = {
+                "delta": jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct((n,) + tuple(np.shape(x)),
+                                                   jnp.float32), trainable),
+                "weight": jax.ShapeDtypeStruct((n,), np.dtype(np.float64)),
+                "loss": jax.ShapeDtypeStruct((n,), np.dtype(np.float32)),
+                "pulled_version": jax.ShapeDtypeStruct((n,),
+                                                       np.dtype(np.int64)),
+                "arrival_time": jax.ShapeDtypeStruct((n,),
+                                                     np.dtype(np.float64)),
+                "cohort": jax.ShapeDtypeStruct((n,), np.dtype(np.int64)),
+            }
+        return like
+
+    @classmethod
+    def from_state_dict(cls, meta, arrays) -> "AsyncServerState":
+        """Rebuild the exact buffer: same entries, same order, same version
+        counter and absolute clock as at ``state_dict`` time."""
+        state = cls()
+        state.version = int(meta["version"])
+        state.clock = float(meta["clock"])
+        cursor: Dict[int, int] = {}
+        for s in meta["stages"]:
+            s = int(s)
+            i = cursor.get(s, 0)
+            cursor[s] = i + 1
+            g = arrays[f"stage_{s}"]
+            state.entries.append(BufferEntry(
+                delta=jax.tree.map(lambda x: x[i], g["delta"]),
+                weight=float(np.asarray(g["weight"])[i]),
+                loss=g["loss"][i],
+                pulled_version=int(np.asarray(g["pulled_version"])[i]),
+                arrival_time=float(np.asarray(g["arrival_time"])[i]),
+                stage=s,
+                cohort=int(np.asarray(g["cohort"])[i])))
+        return state
+
 
 class AsyncBufferedRuntime(ClientRuntime):
     """Stateful FedBuff-style buffered-async server on a simulated clock.
@@ -838,6 +928,17 @@ class AsyncBufferedRuntime(ClientRuntime):
     def reset_state(self):
         """Fresh server: empty buffer, version 0, clock 0."""
         self.state = AsyncServerState()
+
+    def load_server_state(self, state: AsyncServerState):
+        """Install a restored ``AsyncServerState``.  On a 2-D mesh the
+        carried deltas are re-committed to the stage's model-sharded
+        placements so a resumed run keeps the per-device-bytes contract
+        (and the exact GSPMD program layout) of the original run."""
+        if self.mesh is not None:
+            for e in state.entries:
+                e.delta = jax.device_put(
+                    e.delta, self._place.placements(e.stage)[0])
+        self.state = state
 
     def _program(self, t: int):
         if t not in self._programs:

@@ -155,6 +155,22 @@ class SelectionPolicy:
                 round_idx: int) -> None:
         pass
 
+    # -- checkpoint/resume seam -------------------------------------------- #
+    def state_dict(self) -> dict:
+        """JSON-able mutable policy state (TiFL credits, Oort utilities)
+        for exact server resume; stateless policies persist nothing.
+        Constructor configuration (epsilon, credits_per_tier, ...) is NOT
+        included — the restoring server rebuilds the policy from its own
+        ``FLConfig`` and only the accumulated state transfers."""
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state:
+            raise ValueError(
+                f"{type(self).__name__} is stateless but the checkpoint "
+                f"carries selector state {sorted(state)} — selection "
+                f"policy mismatch between save and restore")
+
 
 class RandomPolicy(SelectionPolicy):
     """Uniform among memory-feasible devices (the paper's NeuLite rule)."""
@@ -198,6 +214,15 @@ class TiFLPolicy(SelectionPolicy):
                 self.credits.get(tier, self.credits_per_tier) - 1, 0)
         return selected, n_feasible
 
+    def state_dict(self) -> dict:
+        # JSON object keys are strings; load converts back to int tiers
+        return {"credits": {str(t): int(c)
+                            for t, c in self.credits.items()}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.credits = {int(t): int(c)
+                        for t, c in state.get("credits", {}).items()}
+
 
 class OortPolicy(SelectionPolicy):
     """Oort ε-greedy over the fleet: exploit the top-utility *explored*
@@ -240,6 +265,18 @@ class OortPolicy(SelectionPolicy):
         for cid, loss in zip(selected, losses):
             if np.isfinite(loss):
                 oort_update(self.state, int(cid), float(loss), round_idx)
+
+    def state_dict(self) -> dict:
+        return {"util": {str(c): float(u)
+                         for c, u in self.state.util.items()},
+                "last_round": {str(c): int(r)
+                               for c, r in self.state.last_round.items()}}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.state.util = {int(c): float(u)
+                           for c, u in state.get("util", {}).items()}
+        self.state.last_round = {
+            int(c): int(r) for c, r in state.get("last_round", {}).items()}
 
 
 POLICIES = {"random": RandomPolicy, "tifl": TiFLPolicy, "oort": OortPolicy}

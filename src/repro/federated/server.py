@@ -34,8 +34,10 @@ from repro.data.loader import Batcher
 from repro.federated import aggregation as agg
 from repro.federated.client import dropout_prob, sample_fault_steps
 from repro.federated.devices import Fleet, MaterializedFleet
-from repro.federated.runtime import (AsyncBufferedRuntime, ClientRuntime,
-                                     make_runtime)
+from repro.checkpoint import (latest_checkpoint, load_checkpoint,
+                              read_checkpoint_meta, save_checkpoint)
+from repro.federated.runtime import (AsyncBufferedRuntime, AsyncServerState,
+                                     ClientRuntime, make_runtime)
 from repro.federated.selection import SelectionPolicy, make_policy
 
 
@@ -88,6 +90,12 @@ class FLConfig:
     # --- mid-round client dropout / fault injection (any runtime) ---
     dropout_schedule: str = "none"      # none | constant | ramp
     dropout_rate: float = 0.0           # per-client fault probability
+    # --- crash safety: periodic exact server checkpoints (run()) ---
+    checkpoint_dir: Optional[str] = None  # save_state target; None = never
+    checkpoint_every: int = 0           # save every N completed rounds
+                                        # (0 = never; run() saves after
+                                        # round r when (r+1) % N == 0)
+    keep_checkpoints: int = 3           # rotation depth in checkpoint_dir
 
 
 @dataclasses.dataclass
@@ -176,6 +184,8 @@ class NeuLiteServer:
             # the runtime gets the fleet itself (O(1) state), not a dict
             self.runtime.client_speeds = self.fleet
         self.history: List[RoundResult] = []
+        self.next_round: int = 0        # first round index run() will run
+                                        # (> 0 after restore)
 
     @property
     def devices(self):
@@ -278,16 +288,154 @@ class NeuLiteServer:
                              getattr(self.runtime, "state", None),
                              "version", None))
         self.history.append(rr)
+        self.next_round = r + 1
         return rr
 
     def run(self, rounds: int, log_every: int = 0) -> List[RoundResult]:
-        for r in range(rounds):
+        """Run ``rounds`` further rounds starting at ``self.next_round``
+        (0 on a fresh server, the resume point after ``restore``).  With
+        ``flc.checkpoint_dir`` set and ``flc.checkpoint_every > 0`` the
+        complete round-loop state is checkpointed after every
+        ``checkpoint_every``-th completed round, so a killed process
+        resumes exactly from the last visible checkpoint."""
+        flc = self.flc
+        start = self.next_round
+        for r in range(start, start + rounds):
             rr = self.run_round(r)
             if log_every and (r % log_every == 0):
                 print(f"round {r:4d} stage {rr.stage} "
                       f"loss {rr.mean_loss:.4f} acc {rr.test_acc} "
                       f"feasible {rr.n_feasible}/{self.flc.n_devices}")
+            if (flc.checkpoint_dir is not None and flc.checkpoint_every > 0
+                    and (r + 1) % flc.checkpoint_every == 0):
+                self.save_state(flc.checkpoint_dir)
         return self.history
+
+    # ------------------------------------------------------------------ #
+    # crash safety: exact checkpoint / resume of the full round loop
+    # ------------------------------------------------------------------ #
+    _STATE_FORMAT = "neulite-server"
+    _STATE_VERSION = 1
+
+    def save_state(self, directory: str, *, step: Optional[int] = None,
+                   keep: Optional[int] = None) -> str:
+        """Checkpoint the COMPLETE round-loop state so ``restore`` resumes
+        bit-exactly: server params, the async pending buffer (stacked delta
+        pytrees + per-entry metadata, including stragglers carried across
+        rounds), schedule counters, selector state (TiFL credits / Oort
+        utilities), the server RNG's bit-generator state, per-client and
+        test batcher RNG states (materialized banks; procedural banks are
+        stateless), round history, and the resume point.  Atomic and
+        dtype-exact via ``repro.checkpoint.save_checkpoint``."""
+        tree = {"params": self.params}
+        meta = {
+            "format": self._STATE_FORMAT,
+            "state_version": self._STATE_VERSION,
+            "next_round": int(self.next_round),
+            "runtime": self.runtime.name,
+            "num_stages": int(self.adapter.plan.num_stages),
+            "schedule_kind": type(self.schedule).__name__,
+            "selector_kind": type(self.selector).__name__,
+            "rng": self.rng.bit_generator.state,
+            "schedule": self.schedule.state_dict(),
+            "selector": self.selector.state_dict(),
+            "history": [dataclasses.asdict(rr) for rr in self.history],
+            "async": None,
+            "batcher_rngs": None,
+            "test_batcher_rng": None,
+        }
+        state = getattr(self.runtime, "state", None)
+        if state is not None:
+            arrays, ameta = state.state_dict()
+            tree["async"] = arrays
+            meta["async"] = ameta
+        if isinstance(self.batchers, (list, tuple)):
+            # materialized batchers hold mutable np RNGs that stack_round /
+            # evaluate consume — without them resumed batch order diverges
+            meta["batcher_rngs"] = [b.rng.bit_generator.state
+                                    for b in self.batchers]
+        if self.test_batcher is not None and hasattr(self.test_batcher,
+                                                     "rng"):
+            meta["test_batcher_rng"] = (
+                self.test_batcher.rng.bit_generator.state)
+        if step is None:
+            step = self.next_round
+        if keep is None:
+            keep = self.flc.keep_checkpoints
+        return save_checkpoint(directory, step, tree, meta=meta, keep=keep)
+
+    def load_state(self, path: str) -> None:
+        """Install the state saved by ``save_state`` into this server.
+        The server must have been constructed with the same configuration
+        the checkpointed run was started with (runtime kind, stage count,
+        schedule/selector kinds are validated; everything mutable is then
+        overwritten)."""
+        meta = read_checkpoint_meta(path)
+        if not isinstance(meta, dict) or meta.get("format") \
+                != self._STATE_FORMAT:
+            raise ValueError(
+                f"{path!r} is not a NeuLiteServer state checkpoint "
+                f"(save_state writes format={self._STATE_FORMAT!r}; plain "
+                f"param checkpoints cannot resume a round loop)")
+        mine = {"runtime": self.runtime.name,
+                "num_stages": int(self.adapter.plan.num_stages),
+                "schedule_kind": type(self.schedule).__name__,
+                "selector_kind": type(self.selector).__name__}
+        for key, have in mine.items():
+            if meta.get(key) != have:
+                raise ValueError(
+                    f"checkpoint/server mismatch on {key}: saved "
+                    f"{meta.get(key)!r}, this server has {have!r} — "
+                    f"rebuild the server with the run's original config")
+        like = {"params": self.params}
+        if meta["async"] is not None:
+            like["async"] = AsyncServerState.arrays_like(
+                self.adapter, self.params, meta["async"])
+        tree, _ = load_checkpoint(path, like)
+        self.params = tree["params"]
+        if meta["async"] is not None:
+            self.runtime.load_server_state(
+                AsyncServerState.from_state_dict(meta["async"],
+                                                 tree["async"]))
+        self.rng.bit_generator.state = meta["rng"]
+        self.schedule.load_state_dict(meta["schedule"])
+        self.selector.load_state_dict(meta["selector"])
+        self.history = [RoundResult(**h) for h in meta["history"]]
+        self.next_round = int(meta["next_round"])
+        if meta["batcher_rngs"] is not None:
+            if (not isinstance(self.batchers, (list, tuple))
+                    or len(self.batchers) != len(meta["batcher_rngs"])):
+                n = len(meta["batcher_rngs"])
+                raise ValueError(
+                    f"checkpoint carries {n} client batcher RNG states but "
+                    f"this server holds "
+                    f"{len(self.batchers)} materialized batchers")
+            for b, s in zip(self.batchers, meta["batcher_rngs"]):
+                b.rng.bit_generator.state = s
+        if (meta["test_batcher_rng"] is not None
+                and self.test_batcher is not None
+                and hasattr(self.test_batcher, "rng")):
+            self.test_batcher.rng.bit_generator.state = (
+                meta["test_batcher_rng"])
+
+    @classmethod
+    def restore(cls, adapter, client_datasets, flc: FLConfig,
+                directory: str, **kwargs) -> "NeuLiteServer":
+        """Rebuild a server from its constructor arguments plus the newest
+        complete checkpoint in ``directory`` (or an explicit ``ckpt_*.npz``
+        path).  ``kwargs`` are forwarded to ``__init__`` and must mirror
+        the original construction; the returned server's ``run(n)``
+        continues from the checkpointed round."""
+        if directory.endswith(".npz"):
+            path = directory
+        else:
+            path = latest_checkpoint(directory)
+            if path is None:
+                raise FileNotFoundError(
+                    f"no complete checkpoint found in {directory!r}")
+        server = cls(adapter, client_datasets, flc, **kwargs)
+        server.load_state(path)
+        return server
 
     # ------------------------------------------------------------------ #
     def evaluate(self, max_batches: int = 8, *, batched: bool = True

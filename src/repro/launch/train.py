@@ -6,14 +6,17 @@ variants by default; full configs are for the production mesh):
   python -m repro.launch.train --arch qwen3-1.7b --rounds 20 --smoke
   python -m repro.launch.train --arch qwen3-1.7b --e2e --steps 100  # baseline
 
-The FL simulation maps client cohorts onto synthetic non-IID LM shards;
-each round runs the Alg. 1 stage step (round-robin growth, curriculum loss,
-boundary co-training) on the selected cohort and aggregates the active
-subtree.  Checkpoints + metrics land in --out.
+The FL simulation maps client cohorts onto synthetic non-IID LM shards and
+drives ``NeuLiteServer`` (Alg. 1: round-robin growth, curriculum loss,
+boundary co-training, memory-aware selection).  Checkpoints + metrics land
+in --out; with ``--checkpoint-every N`` the server's complete round-loop
+state is checkpointed every N rounds and ``--resume`` continues a killed
+run bit-exactly from the newest checkpoint in ``<out>/ckpt``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -23,13 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import latest_checkpoint, save_checkpoint
 from repro.common import paramdef as PD
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core import (CurriculumHP, RoundRobinSchedule, make_full_step,
-                        make_stage_step, make_transformer_adapter)
+from repro.core import make_full_step, make_transformer_adapter
+from repro.core.memory import estimate_stage_memory
 from repro.data import dirichlet_partition, make_lm_dataset
-from repro.federated import aggregation as agg
+from repro.federated.devices import Fleet
+from repro.federated.server import FLConfig, NeuLiteServer
 
 
 def lm_batches(ds, idx, batch, seed):
@@ -53,16 +57,24 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--local-epochs", type=int, default=1)
+    ap.add_argument("--runtime", default="sequential",
+                    choices=["sequential", "vectorized", "sharded", "async"])
     ap.add_argument("--e2e", action="store_true",
                     help="vanilla FedAvg baseline instead of NeuLite")
     ap.add_argument("--no-curriculum", action="store_true")
     ap.add_argument("--out", default="results/train")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save the full server state to <out>/ckpt every N "
+                         "rounds (0 = only at the end)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest checkpoint in <out>/ckpt "
+                         "(bit-exact; falls back to a fresh run if none)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.modality != "text":
-        import dataclasses
         cfg = dataclasses.replace(cfg, modality="text")  # text-only driver
     adapter = make_transformer_adapter(cfg, num_stages=args.stages)
     params = adapter.init_params(jax.random.PRNGKey(args.seed))
@@ -72,14 +84,11 @@ def main():
 
     ds = make_lm_dataset(args.seed, 4096, args.seq, cfg.vocab_size)
     parts = dirichlet_partition(args.seed, ds.topics, args.clients, 1.0)
-    optimizer = optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
-    hp = CurriculumHP(enabled=not args.no_curriculum, mu=0.01)
-    schedule = RoundRobinSchedule(adapter.plan.num_stages)
-    rng = np.random.default_rng(args.seed)
     os.makedirs(args.out, exist_ok=True)
     metrics_log = []
 
     if args.e2e:
+        optimizer = optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
         step = jax.jit(make_full_step(adapter, optimizer))
         opt_state = optimizer.init(params)
         for r in range(args.rounds * args.local_steps):
@@ -92,34 +101,40 @@ def main():
                       f"({time.time()-t0:.2f}s)")
             metrics_log.append({"step": r, "loss": float(m["loss"])})
     else:
-        steps = {}
-        for r in range(args.rounds):
-            t = schedule.stage(r)
-            if t not in steps:
-                steps[t] = jax.jit(make_stage_step(adapter, optimizer,
-                                                   hp, t))
-            frozen, g_train = adapter.split_stage(params, t)
-            cohort = rng.choice(args.clients, args.cohort, replace=False)
-            updates, weights = [], []
-            t0 = time.time()
-            for cid in cohort:
-                trainable = g_train
-                opt_state = optimizer.init(trainable)
-                for s in range(args.local_steps):
-                    batch = lm_batches(ds, parts[cid], args.batch,
-                                       args.seed * 1000 + r * 10 + s)
-                    opt_state, trainable, m = steps[t](
-                        opt_state, trainable, frozen, batch, g_train)
-                updates.append(trainable)
-                weights.append(len(parts[cid]))
-            new_train = agg.weighted_average(updates, weights)
-            params = adapter.merge_stage(params, new_train, t)
-            loss = float(m["loss"])
-            upload = agg.tree_bytes(new_train)
-            print(f"round {r:4d} stage {t} loss {loss:.4f} "
-                  f"upload {upload/1e6:.1f}MB ({time.time()-t0:.2f}s)")
-            metrics_log.append({"round": r, "stage": t, "loss": loss,
-                                "upload_bytes": upload})
+        ckpt_dir = os.path.join(args.out, "ckpt")
+        # Fleet budgets are tier fractions (0.25-1.10) of the base budget.
+        # Smoke transformers have stage memory ~= full memory (the head +
+        # embeddings dominate), which would leave every device infeasible —
+        # anchor the base to the LARGEST stage requirement instead so the
+        # driver keeps the relative memory wall but always makes progress.
+        req = max(estimate_stage_memory(adapter, t, args.batch,
+                                        seq=args.seq - 1).total
+                  for t in range(adapter.plan.num_stages))
+        fleet = Fleet(args.seed, args.clients, int(2.5 * req))
+        flc = FLConfig(n_devices=args.clients,
+                       clients_per_round=args.cohort,
+                       local_epochs=args.local_epochs,
+                       batch_size=args.batch, lr=args.lr,
+                       num_stages=args.stages,
+                       curriculum=not args.no_curriculum,
+                       runtime=args.runtime, seed=args.seed,
+                       checkpoint_dir=ckpt_dir,
+                       checkpoint_every=args.checkpoint_every)
+        clients = [ds.subset(p) for p in parts]
+        if args.resume and latest_checkpoint(ckpt_dir) is not None:
+            server = NeuLiteServer.restore(adapter, clients, flc, ckpt_dir,
+                                           data_kind="lm", fleet=fleet)
+            print(f"resumed from {latest_checkpoint(ckpt_dir)} "
+                  f"at round {server.next_round}")
+        else:
+            server = NeuLiteServer(adapter, clients, flc, data_kind="lm",
+                                   fleet=fleet)
+        remaining = args.rounds - server.next_round
+        if remaining > 0:
+            server.run(remaining, log_every=1)
+        server.save_state(ckpt_dir)
+        metrics_log = [dataclasses.asdict(rr) for rr in server.history]
+        params = server.params
         save_checkpoint(args.out, args.rounds, params,
                         meta={"arch": cfg.name, "rounds": args.rounds})
 

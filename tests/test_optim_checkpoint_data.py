@@ -86,6 +86,98 @@ def test_checkpoint_rotation(tmp_path):
     assert len(files) == 3
 
 
+def test_checkpoint_rotation_rejects_nonpositive_keep(tmp_path):
+    """keep=0 used to be a silent no-op (ckpts[:-0] == []) and negative
+    keep deleted the wrong files — both must raise, before writing."""
+    tree = {"w": jnp.zeros(2)}
+    for keep in (0, -1):
+        with pytest.raises(ValueError, match="keep"):
+            save_checkpoint(str(tmp_path), 0, tree, keep=keep)
+    assert os.listdir(tmp_path) == []
+
+
+def test_checkpoint_extension_dtypes_roundtrip_bitexact(tmp_path):
+    """bf16 (ml_dtypes) and f16 leaves must round-trip with their true
+    dtype and exact bits — np.savez alone stores bf16 as an opaque void
+    record (|V2) that jnp.asarray rejects."""
+    tree = {"bf16": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) / 7,
+            "f16": jnp.arange(5, dtype=jnp.float16) / 3,
+            "f32": jnp.ones(3, jnp.float32)}
+    p = save_checkpoint(str(tmp_path), 0, tree)
+    loaded, _ = load_checkpoint(p, tree)
+    for k in tree:
+        a, b = np.asarray(tree[k]), np.asarray(loaded[k])
+        assert b.dtype == a.dtype, k
+        # bit-exact: compare the raw storage, not float values
+        np.testing.assert_array_equal(
+            a.view(np.dtype(f"uint{a.dtype.itemsize * 8}")),
+            b.view(np.dtype(f"uint{b.dtype.itemsize * 8}")))
+
+
+def test_checkpoint_64bit_leaves_survive_without_x64(tmp_path):
+    """int64/float64 leaves (RNG counters, virtual-clock times) must come
+    back with all 64 bits even when jax x64 mode is off — jnp.asarray
+    would silently downcast them."""
+    tree = {"i": np.asarray([2 ** 60 + 1, -5], np.int64),
+            "f": np.asarray([1e308, 1.0 + 2 ** -50], np.float64)}
+    p = save_checkpoint(str(tmp_path), 0, tree)
+    loaded, _ = load_checkpoint(p, tree)
+    for k in tree:
+        assert np.asarray(loaded[k]).dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(loaded[k]), tree[k])
+
+
+def test_truncated_checkpoint_never_loads_as_valid(tmp_path):
+    """A torn ckpt_*.npz (crash mid-write with a pre-atomic writer, disk
+    corruption) must be skipped by latest_checkpoint and raise a clean
+    ValueError from load_checkpoint — never return garbage."""
+    tree = {"w": jnp.arange(128, dtype=jnp.float32)}
+    p0 = save_checkpoint(str(tmp_path), 0, tree)
+    p1 = save_checkpoint(str(tmp_path), 1, tree)
+    with open(p1, "r+b") as f:          # tear the newest file in half
+        f.truncate(os.path.getsize(p1) // 2)
+    assert latest_checkpoint(str(tmp_path)) == p0
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_checkpoint(p1, tree)
+    with open(p1, "wb"):                # zero bytes: still skipped cleanly
+        pass
+    assert latest_checkpoint(str(tmp_path)) == p0
+
+
+def test_save_checkpoint_leaves_no_temp_droppings(tmp_path):
+    """The atomic writer's temp names must never be visible after a
+    successful save (and must not match the ckpt_* pattern rotation and
+    latest_checkpoint scan)."""
+    save_checkpoint(str(tmp_path), 3, {"w": jnp.zeros(2)})
+    assert sorted(os.listdir(tmp_path)) == ["ckpt_00000003.npz",
+                                            "ckpt_00000003.npz.json"]
+
+
+def test_load_checkpoint_names_structure_mismatch(tmp_path):
+    tree = {"a": jnp.zeros(2), "b": jnp.ones(3)}
+    p = save_checkpoint(str(tmp_path), 0, tree)
+    with pytest.raises(ValueError) as ei:
+        load_checkpoint(p, {"a": jnp.zeros(2), "c": jnp.ones(3)})
+    assert "missing leaf paths ['c']" in str(ei.value)
+    assert "unexpected leaf paths ['b']" in str(ei.value)
+
+
+def test_latest_checkpoint_orders_numerically_past_1e8(tmp_path):
+    """Lexical ordering breaks once {step:08d} overflows 8 digits:
+    'ckpt_100000000' < 'ckpt_99999999' as strings."""
+    tree = {"w": jnp.zeros(2)}
+    save_checkpoint(str(tmp_path), 99_999_999, tree)
+    p_big = save_checkpoint(str(tmp_path), 100_000_000, tree)
+    assert latest_checkpoint(str(tmp_path)) == p_big
+    from repro.checkpoint import checkpoint_step
+    assert checkpoint_step(p_big) == 100_000_000
+    # rotation must also drop the numerically-oldest, not lexically-oldest
+    save_checkpoint(str(tmp_path), 100_000_001, tree, keep=2)
+    steps = sorted(checkpoint_step(os.path.join(str(tmp_path), f))
+                   for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert steps == [100_000_000, 100_000_001]
+
+
 # --------------------------------------------------------------------------- #
 # data pipeline
 # --------------------------------------------------------------------------- #

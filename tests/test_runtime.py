@@ -552,3 +552,149 @@ def test_server_backends_agree():
     p_seq = run("sequential")
     p_vec = run("vectorized")
     _assert_trees_equal(p_seq, p_vec, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# crash safety: k rounds -> save_state -> restore in a fresh server -> N-k
+# rounds must equal N straight rounds EXACTLY (params, history, versions) on
+# every backend — the resume contract of NeuLiteServer.save_state/restore
+# --------------------------------------------------------------------------- #
+import dataclasses  # noqa: E402
+
+_RESUME_DATA = {}
+
+
+def _resume_data():
+    if not _RESUME_DATA:
+        ds = make_image_dataset(0, 160, num_classes=4, image_size=8)
+        parts = dirichlet_partition(0, ds.labels, 4, alpha=1.0)
+        _RESUME_DATA["clients"] = [ds.subset(p) for p in parts]
+        _RESUME_DATA["test"] = make_image_dataset(3, 64, num_classes=4,
+                                                  image_size=8)
+        _RESUME_DATA["ccfg"] = CNNConfig(name="r18", arch="resnet18",
+                                         num_classes=4, image_size=8,
+                                         width_mult=0.125)
+    return _RESUME_DATA
+
+
+def _resume_server(kw):
+    d = _resume_data()
+    flc = FLConfig(n_devices=4, clients_per_round=3, local_epochs=1,
+                   batch_size=16, num_stages=2, seed=0, **kw)
+    adapter = make_adapter(d["ccfg"], flc.num_stages)
+    srv = NeuLiteServer(adapter, d["clients"], flc,
+                        test_batcher=Batcher(d["test"], 32, seed=7,
+                                             kind="image"))
+    return srv, adapter
+
+
+def _assert_history_equal(ref, res):
+    assert len(ref) == len(res)
+    for ha, hb in zip(ref, res):
+        da, db = dataclasses.asdict(ha), dataclasses.asdict(hb)
+        for k, va in da.items():
+            vb = db[k]
+            if isinstance(va, float) and np.isnan(va):
+                assert np.isnan(vb), (k, ha, hb)
+            else:
+                assert va == vb, (k, ha, hb)
+
+
+# buffer_size=4 > cohort 3: round k's deliveries stay PENDING across the
+# save point (the carried-straggler case — they must flush after restore
+# exactly as they would have in the uninterrupted run)
+_RESUME_BACKENDS = {
+    "sequential": dict(runtime="sequential"),
+    "vectorized": dict(runtime="vectorized"),
+    "sharded": dict(runtime="sharded"),
+    "async": dict(runtime="async", buffer_size=4,
+                  dropout_schedule="constant", dropout_rate=0.15),
+    "sharded-2d": dict(runtime="sharded", model_parallel=2),
+    "async-2d": dict(runtime="async", buffer_size=4, model_parallel=2),
+}
+
+
+@pytest.mark.parametrize("backend", [
+    pytest.param(b, marks=(needs_multidevice,) if b.endswith("-2d") else ())
+    for b in sorted(_RESUME_BACKENDS)])
+def test_resume_matches_straight_run_exactly(backend, tmp_path):
+    kw = _RESUME_BACKENDS[backend]
+    ref, _ = _resume_server(kw)
+    ref.run(4)
+
+    srv, adapter = _resume_server(kw)
+    srv.run(2)
+    if backend.startswith("async"):
+        # the kill point must strand deliveries in the pending buffer
+        assert len(srv.runtime.state) > 0
+    srv.save_state(str(tmp_path))
+
+    d = _resume_data()
+    res = NeuLiteServer.restore(adapter, d["clients"], srv.flc,
+                                str(tmp_path),
+                                test_batcher=Batcher(d["test"], 32, seed=7,
+                                                     kind="image"))
+    assert res.next_round == 2
+    res.run(2)
+
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _assert_history_equal(ref.history, res.history)
+    if backend.startswith("async"):
+        assert res.runtime.state.version == ref.runtime.state.version
+        assert res.runtime.state.clock == ref.runtime.state.clock
+        assert len(res.runtime.state) == len(ref.runtime.state)
+
+
+@pytest.mark.parametrize("extra", [
+    dict(schedule="plateau"),
+    dict(selection="tifl"),
+    dict(selection="oort"),
+], ids=["plateau", "tifl", "oort"])
+def test_resume_preserves_schedule_and_selector_state(extra, tmp_path):
+    kw = dict(runtime="vectorized", **extra)
+    ref, _ = _resume_server(kw)
+    ref.run(4)
+
+    srv, adapter = _resume_server(kw)
+    srv.run(2)
+    srv.save_state(str(tmp_path))
+    d = _resume_data()
+    res = NeuLiteServer.restore(adapter, d["clients"], srv.flc,
+                                str(tmp_path),
+                                test_batcher=Batcher(d["test"], 32, seed=7,
+                                                     kind="image"))
+    res.run(2)
+
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _assert_history_equal(ref.history, res.history)
+    # the mutable policy/schedule state itself must have converged to the
+    # straight run's, not just the params
+    assert ref.schedule.state_dict() == res.schedule.state_dict()
+    assert ref.selector.state_dict() == res.selector.state_dict()
+
+
+def test_restore_rejects_config_mismatch(tmp_path):
+    srv, adapter = _resume_server(dict(runtime="vectorized"))
+    srv.run(1)
+    srv.save_state(str(tmp_path))
+    d = _resume_data()
+    flc2 = dataclasses.replace(srv.flc, runtime="async", buffer_size=2)
+    with pytest.raises(ValueError, match="mismatch on runtime"):
+        NeuLiteServer.restore(adapter, d["clients"], flc2, str(tmp_path))
+    flc3 = dataclasses.replace(srv.flc, selection="oort")
+    with pytest.raises(ValueError, match="mismatch on selector_kind"):
+        NeuLiteServer.restore(adapter, d["clients"], flc3, str(tmp_path))
+
+
+def test_restore_rejects_plain_param_checkpoint(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    srv, adapter = _resume_server(dict(runtime="vectorized"))
+    save_checkpoint(str(tmp_path), 0, srv.params, meta={"arch": "r18"})
+    d = _resume_data()
+    with pytest.raises(ValueError, match="not a NeuLiteServer state"):
+        NeuLiteServer.restore(adapter, d["clients"], srv.flc,
+                              str(tmp_path))
