@@ -5,7 +5,6 @@ from __future__ import annotations
 import json
 import time
 
-import numpy as np
 
 from benchmarks.common import csv_row, ensure_dir
 from repro.configs.paper_models import vit

@@ -9,7 +9,6 @@ import time
 from benchmarks.common import csv_row, ensure_dir, make_fl_setup
 from repro.core import make_adapter
 from repro.core.memory import estimate_full_memory
-from repro.federated.baselines import BASELINES
 from repro.federated.selection import memory_feasible
 from repro.federated.server import FLConfig, NeuLiteServer
 from repro.models.cnn import CNNConfig

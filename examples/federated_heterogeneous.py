@@ -18,7 +18,6 @@ Environment knobs (CI smoke / quick experiments):
 """
 import os
 
-import numpy as np
 
 from repro.core import make_adapter
 from repro.data import Batcher, dirichlet_partition, make_image_dataset

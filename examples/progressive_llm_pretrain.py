@@ -18,11 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import paramdef as PD
 from repro.core import CurriculumHP, RoundRobinSchedule, make_adapter, \
     make_full_step, make_stage_step
 from repro.data import make_lm_dataset
 from repro.models.config import ModelConfig
-from repro.common import paramdef as PD
 from repro.optim import adamw
 
 ap = argparse.ArgumentParser()

@@ -67,11 +67,11 @@ print("\ndone — the full model is assembled in `params`.")
 # reference Python loop; "vectorized" fuses cohort-vmapped local training
 # with the Eq. 1 FedAvg into ONE jitted program; "sharded" runs that
 # program under shard_map with the cohort axis split over a device mesh.
-import time
+import time  # noqa: E402
 
-from repro.data import Batcher
-from repro.data.loader import stack_round
-from repro.federated.runtime import make_runtime
+from repro.data import Batcher  # noqa: E402
+from repro.data.loader import stack_round  # noqa: E402
+from repro.federated.runtime import make_runtime  # noqa: E402
 
 cohorts = 4
 batchers = [Batcher(ds.subset(np.arange(c, len(ds), cohorts)), BATCH,

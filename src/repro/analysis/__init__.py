@@ -1,0 +1,33 @@
+"""Round-program auditor: static invariant checks for the FL runtime.
+
+The paper's headline claims are *structural* — block-wise training cuts
+peak memory, the Eq. 1 aggregation is ONE all-reduce over the ``data``
+mesh axis, hot paths never sync to the host — yet benchmarks only sample
+them.  This package *proves* them per commit by tracing (never running)
+each backend's round programs and walking the jaxpr and compiled HLO:
+
+  collectives  — every data-axis-crossing collective in a round program
+                 must be an Eq. 1 all-reduce; no all-gather /
+                 reduce-scatter / permute may cross the data axis.
+  memory       — ``Compiled.memory_analysis()`` peak bytes per stage must
+                 undercut the full-model reference program; at
+                 ``model_parallel=K>=2`` per-device trainable bytes must
+                 be <= 0.55x the replicated footprint.
+  hostsync     — no callbacks / f64 promotions in traced programs; a
+                 runtime probe asserts the ``run_round`` hot path performs
+                 zero device-to-host transfers and the server batches its
+                 per-round sync into one ``jax.device_get``.
+  donation     — arguments a program donates for in-place reuse must
+                 actually alias outputs in the compiled executable.
+
+Programs come from the registry hooks each ``ClientRuntime`` backend
+contributes (``trace_specs`` / ``full_reference_spec`` in
+``federated/runtime.py``).  Run it locally with::
+
+    PYTHONPATH=src python -m repro.analysis --backend sharded --model-parallel 2
+
+See docs/analysis.md for every invariant and the waiver syntax.
+"""
+from repro.analysis.report import Finding, Report
+
+__all__ = ["Finding", "Report"]

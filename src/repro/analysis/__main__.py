@@ -1,0 +1,73 @@
+"""CLI: ``python -m repro.analysis --backend sharded --model-parallel 2``.
+
+Traces (never runs) the chosen backend's round programs and checks the
+repo's structural contracts — collectives, per-stage memory, host syncs,
+donation — exiting non-zero on any un-waived error.  See docs/analysis.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static round-program auditor (jaxpr/HLO invariants).")
+    ap.add_argument("--backend", default="sharded",
+                    choices=["seq", "vec", "sharded", "async",
+                             "sequential", "vectorized"],
+                    help="runtime backend whose round programs to audit")
+    ap.add_argument("--model-parallel", type=int, default=1, metavar="K",
+                    help="model-axis size for sharded/async (default 1)")
+    ap.add_argument("--arch", default="tx", choices=["tx", "cnn"],
+                    help="tiny audit model (dense transformer or ResNet18)")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the dynamic host-sync probe (pure tracing; "
+                         "use where running even a tiny round is too slow)")
+    ap.add_argument("--waive", action="append", default=[], metavar="CHECK",
+                    help="downgrade a check (e.g. memory.trainable-ratio "
+                         "or a whole family like 'donation') to a warning; "
+                         "repeatable")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full report (findings + per-stage "
+                         "memory table + collective census) as JSON")
+    ap.add_argument("--write-bench", metavar="PATH", nargs="?",
+                    const="BENCH_fl_round.json",
+                    help="merge the audited static memory table into "
+                         "BENCH_fl_round.json (static bytes next to the "
+                         "measured throughput columns)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print info-level findings")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.harness import run_audits
+    report = run_audits(args.backend, model_parallel=args.model_parallel,
+                        arch=args.arch, waive=args.waive,
+                        probe=not args.no_probe)
+    print(report.render(verbose=args.verbose))
+    if args.json:
+        report.dump_json(args.json)
+        print(f"report written to {args.json}")
+    if args.write_bench and "memory" in report.artifacts:
+        key = (f"{args.arch}/{args.backend}"
+               + (f"/mp{args.model_parallel}"
+                  if args.model_parallel > 1 else ""))
+        try:
+            with open(args.write_bench) as fh:
+                bench = json.load(fh)
+        except FileNotFoundError:
+            bench = {}
+        bench.setdefault("static_memory", {})[key] = \
+            report.artifacts["memory"]
+        with open(args.write_bench, "w") as fh:
+            json.dump(bench, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"static memory table merged into {args.write_bench} "
+              f"under static_memory[{key!r}]")
+    return 0 if report.ok() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,240 @@
+"""Collective audit: walk compiled HLO and classify every collective.
+
+The repo's core communication claim (docs/runtime.md, PR 3) is that the
+Eq. 1 aggregation lowers to ONE all-reduce over the ``data`` mesh axis per
+aggregated leaf — cohort locals are never gathered — while model-axis
+collectives (tensor-parallel all-gathers, halo collective-permutes from
+sharded convolutions) stay confined within a model group.  This module
+turns that prose into checks:
+
+  * parse every collective op out of post-SPMD HLO, including its replica
+    groups in all three textual forms XLA emits — literal ``{{0,2},{1,3}}``,
+    iota ``[4,2]<=[8]``, and transposed iota ``[2,4]<=[4,2]T(1,0)`` — and
+    ``source_target_pairs`` for collective-permute;
+  * classify each op by the mesh axes its groups *cross* (a group crosses
+    an axis iff two of its devices differ in that axis coordinate);
+  * enforce per-program rules: aggregation seams may contain only
+    data-axis all-reduces (bounded by leaf count), local-training programs
+    may not cross the data axis at all, round programs may cross it only
+    with the Eq. 1 all-reduces — and any data-crossing collective inside a
+    sub-computation (a scan/while body: a per-step collective) is an error
+    even when the total count stays in bounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute",
+                    "collective-broadcast")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.-]+)\s*=\s*[^=]*?\s"
+    r"(?P<kind>" + "|".join(COLLECTIVE_KINDS) + r")(?:-start)?\(")
+_COMP_RE = re.compile(r"^(?P<entry>ENTRY\s+)?%?(?P<name>[\w.$-]+)\s*"
+                      r"\([^)]*\)\s*->.*\{")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(?P<literal>\{\{[0-9,{}\s]*\}\}|\{\})"
+    r"|replica_groups=\[(?P<gshape>[0-9,]+)\]<=\[(?P<idims>[0-9,]+)\]"
+    r"(?:T\((?P<perm>[0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(?P<pairs>[0-9,{}\s]*)\}")
+_SRC_RE = re.compile(r'source_file="(?P<file>[^"]*)"[^}]*'
+                     r"source_line=(?P<line>\d+)")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    name: str                      # HLO op name
+    computation: str
+    in_entry: bool
+    groups: List[List[int]]        # expanded device-id groups (or pairs)
+    source: Optional[str] = None   # "file:line" from op metadata
+    crossed_axes: Tuple[str, ...] = ()
+
+    def where(self) -> str:
+        loc = f"%{self.name} in %{self.computation}"
+        return f"{loc} ({self.source})" if self.source else loc
+
+
+def expand_iota_groups(gshape: str, idims: str,
+                       perm: Optional[str]) -> List[List[int]]:
+    """Expand XLA's iota replica-group form ``[g,n]<=[dims]T(perm)``."""
+    shape = [int(x) for x in gshape.split(",")]
+    dims = [int(x) for x in idims.split(",")]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if perm is not None:
+        ids = ids.transpose([int(x) for x in perm.split(",")])
+    return [list(map(int, row)) for row in ids.reshape(shape)]
+
+
+def _expand_literal(text: str, n_devices: int) -> List[List[int]]:
+    if text.strip() in ("{}", "{{}}"):        # empty = one group of all
+        return [list(range(n_devices))]
+    return [[int(x) for x in grp.split(",") if x.strip()]
+            for grp in re.findall(r"\{([0-9,\s]*)\}", text)
+            if grp.strip()] or [list(range(n_devices))]
+
+
+def parse_collective_ops(hlo_text: str,
+                         n_devices: int) -> List[CollectiveOp]:
+    """All collective ops in an HLO module, with expanded replica groups
+    and the computation (entry vs sub-computation) each lives in."""
+    ops: List[CollectiveOp] = []
+    comp, entry = "<module>", True
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            comp, entry = mc.group("name"), bool(mc.group("entry"))
+            continue
+        mo = _OP_RE.match(line)
+        if not mo or mo.group("name").endswith("-done"):
+            continue
+        kind = mo.group("kind")
+        if kind == "collective-permute":
+            mp = _PAIRS_RE.search(line)
+            groups = ([[int(a), int(b)] for a, b in re.findall(
+                r"\{(\d+)\s*,\s*(\d+)\}", mp.group("pairs"))]
+                if mp else [])
+        else:
+            mg = _GROUPS_RE.search(line)
+            if mg is None:
+                groups = [list(range(n_devices))]
+            elif mg.group("literal") is not None:
+                groups = _expand_literal(mg.group("literal"), n_devices)
+            else:
+                groups = expand_iota_groups(mg.group("gshape"),
+                                            mg.group("idims"),
+                                            mg.group("perm"))
+        ms = _SRC_RE.search(line)
+        source = (f"{ms.group('file').rsplit('/', 1)[-1]}:"
+                  f"{ms.group('line')}" if ms else None)
+        ops.append(CollectiveOp(kind=kind, name=mo.group("name"),
+                                computation=comp, in_entry=entry,
+                                groups=groups, source=source))
+    return ops
+
+
+def device_coords(ids_grid: np.ndarray,
+                  axis_names: Sequence[str]) -> Dict[int, dict]:
+    """device id -> {axis_name: coordinate} from a mesh's id grid."""
+    coords: Dict[int, dict] = {}
+    for idx in np.ndindex(*ids_grid.shape):
+        coords[int(ids_grid[idx])] = dict(zip(axis_names, idx))
+    return coords
+
+
+def crossed_axes(groups: Sequence[Sequence[int]], coords: Dict[int, dict],
+                 axis_names: Sequence[str]) -> Tuple[str, ...]:
+    """Mesh axes along which any group's devices differ."""
+    crossed = []
+    for ax in axis_names:
+        for group in groups:
+            vals = {coords[d][ax] for d in group if d in coords}
+            if len(vals) > 1:
+                crossed.append(ax)
+                break
+    return tuple(crossed)
+
+
+def mesh_ids(mesh) -> np.ndarray:
+    return np.vectorize(lambda d: getattr(d, "id", d))(mesh.devices)
+
+
+def classify_ops(ops: List[CollectiveOp], ids_grid: np.ndarray,
+                 axis_names: Sequence[str]) -> List[CollectiveOp]:
+    coords = device_coords(ids_grid, axis_names)
+    for op in ops:
+        op.crossed_axes = crossed_axes(op.groups, coords, axis_names)
+    return ops
+
+
+def audit_collectives(spec, hlo_text: str, report) -> dict:
+    """Check one lowered program's collectives against its kind's rules.
+
+    Returns a summary dict (per-kind counts by crossed axes) that the CLI
+    folds into the JSON artifact.
+    """
+    if spec.mesh is None or spec.data_axis is None:
+        return {}
+    ids_grid = mesh_ids(spec.mesh)
+    axis_names = list(spec.mesh.axis_names)
+    ops = classify_ops(
+        parse_collective_ops(hlo_text, int(ids_grid.size)),
+        ids_grid, axis_names)
+    data_ax = spec.data_axis
+    data_size = dict(spec.mesh.shape).get(data_ax, 1)
+    data_ops = [op for op in ops if data_ax in op.crossed_axes]
+    summary = {
+        "program": spec.name,
+        "n_collectives": len(ops),
+        "by_kind": {},
+    }
+    for op in ops:
+        key = f"{op.kind}[{','.join(op.crossed_axes) or 'intra'}]"
+        summary["by_kind"][key] = summary["by_kind"].get(key, 0) + 1
+
+    for op in data_ops:
+        if op.kind != "all-reduce":
+            report.add(
+                "collectives.data-axis-gather",
+                f"{op.kind} crosses the '{data_ax}' axis "
+                f"(groups {op.groups[:2]}...): cohort-sharded values must "
+                f"only ever combine through the Eq. 1 all-reduce — an "
+                f"{op.kind} here materializes per-cohort locals on every "
+                f"data shard. Check with_sharding_constraint / "
+                f"out_shardings on the aggregation seam.",
+                program=spec.name, location=op.where())
+        elif not op.in_entry:
+            report.add(
+                "collectives.data-axis-in-loop",
+                f"all-reduce over '{data_ax}' inside sub-computation "
+                f"%{op.computation} — a per-step collective in the local "
+                f"training scan violates 'no cross-cohort communication "
+                f"during local training' (it runs E times per round, not "
+                f"once).",
+                program=spec.name, location=op.where())
+
+    data_allreduce = [op for op in data_ops
+                      if op.kind == "all-reduce" and op.in_entry]
+    n = len(data_allreduce)
+    summary["data_axis_all_reduces"] = n
+    if spec.kind == "local":
+        for op in data_ops:
+            report.add(
+                "collectives.local-data-crossing",
+                f"{op.kind} crosses the '{data_ax}' axis in a "
+                f"local-training program — local training must have NO "
+                f"cross-cohort communication (Alg. 1 lines 5-9); only the "
+                f"flush/aggregation seam may reduce over cohorts.",
+                program=spec.name, location=op.where())
+        return summary
+    if spec.kind == "aggregation":
+        for op in ops:
+            if op.kind != "all-reduce":
+                report.add(
+                    "collectives.seam-non-allreduce",
+                    f"the Eq. 1 seam lowered a {op.kind} "
+                    f"(crossing {op.crossed_axes or ('nothing',)}) — the "
+                    f"seam must be pure all-reduce; a gather here breaks "
+                    f"the 'no gather of cohort locals' contract.",
+                    program=spec.name, location=op.where())
+    if data_size > 1 and spec.n_agg_leaves:
+        lo, hi = 1, spec.n_agg_leaves + 2
+        if not (lo <= n <= hi):
+            report.add(
+                "collectives.eq1-allreduce-count",
+                f"expected between {lo} and {hi} data-axis all-reduces "
+                f"(one per aggregated leaf [{spec.n_agg_leaves}] plus the "
+                f"weight-normalizer / mean-loss scalars), found {n}. "
+                f"Fewer than 1 means the aggregation no longer reduces "
+                f"over '{data_ax}' (silently averaging one shard's "
+                f"cohorts); more means a redundant reduction crept in.",
+                program=spec.name,
+                location=(data_allreduce[0].where()
+                          if data_allreduce else None))
+    return summary

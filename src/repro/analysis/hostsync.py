@@ -1,0 +1,239 @@
+"""Host-sync & purity audit.
+
+Two complementary halves:
+
+**Static (jaxpr walk)** — ``purity_findings`` traces a program spec and
+walks every equation (including scan/while/cond sub-jaxprs) for things
+that do not belong in a round hot path: host callbacks
+(``pure_callback`` / ``io_callback`` / ``debug_callback``) and silent
+float64 promotions.  Each finding carries the user source location from
+the equation's ``source_info``.
+
+**Dynamic (transfer probe)** — the round *driver* is host Python that a
+jaxpr cannot see, so ``transfer_probe`` instruments the seams through
+which device values reach the host: ``ArrayImpl.__float__/__int__/
+__bool__/__index__/item/tolist``, ``np.asarray``/``np.array`` on jax
+arrays, and ``jax.device_get`` (the one *sanctioned* sync point).  The
+contracts (docs/runtime.md, now checked):
+
+  * ``ClientRuntime.run_round`` — ZERO host transfers, sanctioned or not
+    (losses stay on device; the server decides when to sync);
+  * ``NeuLiteServer.run_round`` — exactly one batched ``jax.device_get``
+    (mean loss + cohort losses together) and nothing unsanctioned;
+  * ``NeuLiteServer.evaluate`` — exactly one ``jax.device_get`` for the
+    (correct, total) counts.
+
+Python-level branching on traced values needs no checker: it raises
+``ConcretizationTypeError`` at trace time, which the CLI reports as a
+finding instead of a crash.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import traceback
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+CALLBACK_PRIMITIVES = ("pure_callback", "io_callback", "debug_callback",
+                       "callback")
+
+
+def _source_of(eqn) -> Optional[str]:
+    try:
+        from jax._src import source_info_util
+        frame = source_info_util.user_frame(eqn.source_info)
+        if frame is None:
+            return None
+        return f"{frame.file_name.rsplit('/', 1)[-1]}:{frame.start_line}"
+    except Exception:
+        return None
+
+
+def _walk_eqns(jaxpr, visit):
+    for eqn in jaxpr.eqns:
+        visit(eqn)
+        for v in eqn.params.values():
+            for sub in jax.tree.leaves(
+                    v, is_leaf=lambda x: isinstance(
+                        x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    _walk_eqns(sub.jaxpr, visit)
+                elif isinstance(sub, jax.core.Jaxpr):
+                    _walk_eqns(sub, visit)
+
+
+def purity_findings(spec, report) -> None:
+    """Trace ``spec`` and report callbacks / f64 promotions in its jaxpr."""
+    try:
+        closed = jax.make_jaxpr(spec.fn)(*spec.abstract_args)
+    except Exception as e:                    # e.g. ConcretizationTypeError
+        report.add(
+            "hostsync.trace-failure",
+            f"program failed to trace: {type(e).__name__}: {e} — "
+            f"Python-level branching on a traced value (or a shape bug) "
+            f"in the round program.",
+            program=spec.name)
+        return
+
+    def visit(eqn):
+        prim = eqn.primitive.name
+        if any(cb in prim for cb in CALLBACK_PRIMITIVES):
+            report.add(
+                "hostsync.callback",
+                f"primitive '{prim}' embeds a host callback in the round "
+                f"program — the hot path must stay on device; move the "
+                f"host work to the server driver or delete it.",
+                program=spec.name, location=_source_of(eqn))
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            dtype = getattr(aval, "dtype", None)
+            if dtype is not None and np.dtype(dtype) == np.float64:
+                report.add(
+                    "hostsync.f64-promotion",
+                    f"primitive '{prim}' produces float64 "
+                    f"{getattr(aval, 'shape', ())} — a silent f64 "
+                    f"promotion doubles bytes and falls off the fast "
+                    f"path; cast the operand (usually a np.float64 "
+                    f"constant) to float32.",
+                    program=spec.name, location=_source_of(eqn))
+
+    _walk_eqns(closed.jaxpr, visit)
+
+
+# --------------------------------------------------------------------------- #
+# dynamic transfer probe
+# --------------------------------------------------------------------------- #
+class TransferProbe:
+    """Recorded device-to-host transfer events during a probed window."""
+
+    def __init__(self):
+        self.unsanctioned: List[str] = []     # "via @ file:line" entries
+        self.device_gets: List[str] = []      # sanctioned sync points
+
+    def _caller(self) -> str:
+        for frame in reversed(traceback.extract_stack()[:-2]):
+            fn = frame.filename
+            if ("analysis/hostsync" in fn or "/jax/" in fn
+                    or "/numpy/" in fn or "jax/_src" in fn):
+                continue
+            return f"{fn.rsplit('/', 1)[-1]}:{frame.lineno}"
+        return "<unknown>"
+
+    def record(self, via: str, sanctioned: bool) -> None:
+        entry = f"{via} @ {self._caller()}"
+        (self.device_gets if sanctioned else self.unsanctioned).append(entry)
+
+
+@contextlib.contextmanager
+def transfer_probe():
+    """Instrument every device->host seam; yields a ``TransferProbe``.
+
+    ``jax.device_get`` counts as sanctioned (and suppresses the nested
+    numpy-conversion events it triggers); everything else — ``float()`` /
+    ``int()`` / ``bool()`` on a jax array, ``.item()`` / ``.tolist()``,
+    ``np.asarray``/``np.array`` on a jax array — is an unsanctioned sync.
+    """
+    probe = TransferProbe()
+    local = threading.local()
+    arr_t = type(jax.numpy.zeros(()))
+
+    def in_sanctioned() -> bool:
+        return getattr(local, "depth", 0) > 0
+
+    def wrap_dunder(name):
+        orig = getattr(arr_t, name)
+
+        def wrapped(self, *a, **kw):
+            if not in_sanctioned():
+                probe.record(f"ArrayImpl.{name}", sanctioned=False)
+            return orig(self, *a, **kw)
+
+        return orig, wrapped
+
+    def wrap_np(fn):
+        def wrapped(a, *args, **kw):
+            if isinstance(a, jax.Array) and not in_sanctioned():
+                probe.record(f"np.{fn.__name__}", sanctioned=False)
+            return fn(a, *args, **kw)
+
+        return wrapped
+
+    orig_get = jax.device_get
+
+    def wrapped_get(x):
+        probe.record("jax.device_get", sanctioned=True)
+        local.depth = getattr(local, "depth", 0) + 1
+        try:
+            return orig_get(x)
+        finally:
+            local.depth -= 1
+
+    dunders = ["__float__", "__int__", "__bool__", "__index__", "item",
+               "tolist"]
+    saved = {}
+    for name in dunders:
+        orig, wrapped = wrap_dunder(name)
+        saved[name] = orig
+        setattr(arr_t, name, wrapped)
+    np_saved = {"asarray": np.asarray, "array": np.array}
+    np.asarray = wrap_np(np.asarray)
+    np.array = wrap_np(np.array)
+    jax.device_get = wrapped_get
+    try:
+        yield probe
+    finally:
+        for name, orig in saved.items():
+            setattr(arr_t, name, orig)
+        np.asarray = np_saved["asarray"]
+        np.array = np_saved["array"]
+        jax.device_get = orig_get
+
+
+def _report_events(probe, report, *, program: str, expect_gets: int,
+                   what: str) -> None:
+    for entry in probe.unsanctioned:
+        report.add(
+            "hostsync.hidden-transfer",
+            f"device->host transfer via {entry} inside {what} — batch it "
+            f"into the round's single jax.device_get (or keep the value "
+            f"on device).",
+            program=program)
+    if len(probe.device_gets) > expect_gets:
+        report.add(
+            "hostsync.excess-sync",
+            f"{len(probe.device_gets)} jax.device_get calls inside {what} "
+            f"(contract: at most {expect_gets}): "
+            f"{probe.device_gets} — batch them into one.",
+            program=program)
+
+
+def audit_runtime_round(runtime, params, t, batchers, cohorts,
+                        local_epochs, report) -> None:
+    """``ClientRuntime.run_round`` must perform ZERO host transfers."""
+    with transfer_probe() as probe:
+        runtime.run_round(params, t, batchers, cohorts, local_epochs)
+    _report_events(probe, report,
+                   program=f"{runtime.name}.run_round",
+                   expect_gets=0, what="ClientRuntime.run_round")
+
+
+def audit_server_round(server, report) -> None:
+    """One ``NeuLiteServer.run_round`` + one ``evaluate`` under the probe."""
+    test_batcher = server.test_batcher
+    server.test_batcher = None      # probe evaluate separately below
+    try:
+        with transfer_probe() as probe:
+            server.run_round(server.next_round)
+    finally:
+        server.test_batcher = test_batcher
+    _report_events(probe, report, program="NeuLiteServer.run_round",
+                   expect_gets=1, what="NeuLiteServer.run_round")
+    if test_batcher is None:
+        return
+    with transfer_probe() as probe:
+        server.evaluate()
+    _report_events(probe, report, program="NeuLiteServer.evaluate",
+                   expect_gets=1, what="NeuLiteServer.evaluate")

@@ -9,7 +9,7 @@ how many trailing units of the previous block co-train with the current one
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,11 +16,9 @@ from __future__ import annotations
 import dataclasses
 from typing import List
 
-import jax
 import numpy as np
 
 from repro.common import paramdef as PD
-from repro.core.blocks import BlockPlan
 from repro.models import cnn as cnn_mod
 from repro.models.config import ModelConfig
 
@@ -72,7 +70,7 @@ def _cnn_act_bytes(ccfg: cnn_mod.CNNConfig, batch: int,
     metas = cnn_mod.unit_meta(ccfg)
     hw = ccfg.image_size
     total = 0
-    for i, (kind, meta) in enumerate(metas):
+    for i, (_kind, meta) in enumerate(metas):
         hw_out = hw // meta["stride"]
         if i in unit_range:
             total += 3 * batch * hw_out * hw_out * meta["cout"] * 4

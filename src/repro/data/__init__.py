@@ -1,9 +1,9 @@
+from repro.data.loader import Batcher
+from repro.data.partition import (ProceduralClients, dirichlet_partition,
+                                  iid_partition)
 from repro.data.synthetic import (SyntheticImageDataset, SyntheticLMDataset,
                                   make_femnist_like, make_image_dataset,
                                   make_lm_dataset)
-from repro.data.partition import (ProceduralClients, dirichlet_partition,
-                                  iid_partition)
-from repro.data.loader import Batcher
 
 __all__ = ["SyntheticImageDataset", "SyntheticLMDataset", "make_lm_dataset",
            "make_image_dataset", "make_femnist_like", "dirichlet_partition",

@@ -22,7 +22,7 @@ paper reports for SqueezeNet.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -30,12 +30,12 @@ import numpy as np
 
 from repro import optim
 from repro.common import paramdef as PD
-from repro.core import make_cnn_adapter, make_full_step
+from repro.core import make_cnn_adapter
 from repro.core.memory import estimate_full_memory
 from repro.data.loader import Batcher
 from repro.federated import aggregation as agg
 from repro.federated.client import run_local_training_full
-from repro.federated.devices import DeviceProfile, sample_devices
+from repro.federated.devices import sample_devices
 from repro.federated.selection import (OortState, memory_feasible,
                                        oort_select, oort_update,
                                        random_select, tifl_select)

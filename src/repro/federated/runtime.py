@@ -50,7 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.curriculum import CurriculumHP
-from repro.core.progressive import Adapter, jit_stage_step, make_stage_loss
+from repro.core.progressive import (Adapter, jit_stage_step, make_full_step,
+                                    make_stage_loss, make_stage_step)
 from repro.data.loader import (Batcher, RoundStack, stack_round,
                                truncate_step_mask)
 from repro.federated import aggregation as agg
@@ -102,6 +103,44 @@ def make_local_program(adapter: Adapter, optimizer, hp: CurriculumHP,
     return local_fn
 
 
+def _psum_if(x, ax):
+    return x if ax is None else jax.lax.psum(x, ax)
+
+
+def eq1_aggregate(locals_, weights, losses, *, axis: Optional[str] = None,
+                  locals_shardings: Any = None):
+    """The Eq. 1 aggregation seam: one weighted einsum over the cohort axis.
+
+    ``locals_`` leaves carry a leading (C,) cohort axis; ``weights`` is the
+    (C,) sample-count vector and ``losses`` the (C,) per-cohort mean local
+    loss.  Returns ``(new_trainable, mean_loss)``.  Every synchronous
+    backend funnels its round through this function — it is the single
+    point the collective auditor (``repro.analysis``) traces to prove the
+    "one all-reduce over 'data' per aggregated leaf" contract, and the
+    instrumentation point for secure-agg / DP hooks.
+
+    With ``axis`` set the reductions are explicit ``psum`` collectives
+    (the ``shard_map`` path); with ``locals_shardings`` set the cohort
+    contraction lowers under GSPMD to one all-reduce over the data axis
+    per leaf while model shards keep owning their slice (no gather).
+    """
+    if locals_shardings is not None:
+        locals_ = jax.lax.with_sharding_constraint(locals_,
+                                                   locals_shardings)
+    total = weights.sum().astype(jnp.float32)
+    if axis is not None:
+        total = jax.lax.psum(total, axis)
+    w = weights.astype(jnp.float32) / jnp.maximum(total, 1e-12)
+    # Eq. 1: weighted FedAvg over the trainable subtree only — this
+    # einsum over the cohort axis is the round's one all-reduce
+    new_trainable = jax.tree.map(
+        lambda leaf: _psum_if(jnp.einsum(
+            "c...,c->...", leaf.astype(jnp.float32), w), axis).astype(
+                leaf.dtype), locals_)
+    mean_loss = _psum_if(jnp.sum(losses * w), axis)
+    return new_trainable, mean_loss
+
+
 def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
                        *, axis: Optional[str] = None,
                        locals_shardings: Any = None):
@@ -128,25 +167,59 @@ def make_round_program(adapter: Adapter, optimizer, hp: CurriculumHP, t: int,
 
     def round_fn(trainable, frozen, batches, weights, step_mask):
         locals_, losses = local_fn(trainable, frozen, batches, step_mask)
-        if locals_shardings is not None:
-            locals_ = jax.lax.with_sharding_constraint(locals_,
-                                                       locals_shardings)
-        total = weights.sum().astype(jnp.float32)
-        if axis is not None:
-            total = jax.lax.psum(total, axis)
-        w = weights.astype(jnp.float32) / jnp.maximum(total, 1e-12)
-        # Eq. 1: weighted FedAvg over the trainable subtree only — this
-        # einsum over the cohort axis is the round's one all-reduce
-        new_trainable = jax.tree.map(
-            lambda l: _psum_if(jnp.einsum(
-                "c...,c->...", l.astype(jnp.float32), w), axis).astype(
-                    l.dtype), locals_)
-        mean_loss = _psum_if(jnp.sum(losses * w), axis)
+        new_trainable, mean_loss = eq1_aggregate(
+            locals_, weights, losses, axis=axis,
+            locals_shardings=locals_shardings)
         return new_trainable, {"mean_local_loss": mean_loss,
                                "cohort_losses": losses}
 
-    def _psum_if(x, ax):
-        return x if ax is None else jax.lax.psum(x, ax)
+    return round_fn
+
+
+def make_full_round_program(adapter: Adapter, optimizer,
+                            *, axis: Optional[str] = None,
+                            locals_shardings: Any = None):
+    """Full-model FL round (vanilla FedAvg): the memory-audit reference.
+
+    Same structure as ``make_round_program`` — cohort-vmapped masked
+    ``lax.scan`` local training fused with the Eq. 1 einsum — but every
+    parameter trains (no frozen subtree), so gradients and optimizer state
+    cover the whole model.  ``repro.analysis`` compiles this next to the
+    per-stage programs to machine-check the paper's block-wise-memory
+    claim: every stage's peak bytes must undercut this program's.
+    """
+
+    def local_training(params0, cohort_batches, cohort_mask):
+        opt_state0 = optimizer.init(params0)
+
+        def step(carry, xs):
+            batch, keep = xs
+            opt_state, params = carry
+
+            def sel(new, old):
+                return jnp.where(keep, new, old)
+
+            loss, grads = jax.value_and_grad(adapter.full_loss)(params,
+                                                                batch)
+            updates, new_opt = optimizer.update(grads, opt_state, params)
+            new_p = apply_updates(params, updates)
+            carry = (jax.tree.map(sel, new_opt, opt_state),
+                     jax.tree.map(sel, new_p, params))
+            return carry, jnp.where(keep, loss, 0.0)
+
+        (_, params), losses = jax.lax.scan(
+            step, (opt_state0, params0), (cohort_batches, cohort_mask))
+        n = jnp.maximum(cohort_mask.sum(), 1)
+        return params, losses.sum() / n
+
+    def round_fn(params, batches, weights, step_mask):
+        locals_, losses = jax.vmap(local_training, in_axes=(None, 0, 0))(
+            params, batches, step_mask)
+        new_params, mean_loss = eq1_aggregate(
+            locals_, weights, losses, axis=axis,
+            locals_shardings=locals_shardings)
+        return new_params, {"mean_local_loss": mean_loss,
+                            "cohort_losses": losses}
 
     return round_fn
 
@@ -180,6 +253,87 @@ def cohort_batches_specs(cfg, num_cohorts: int, local_steps: int,
     inputs = jax.tree.map(stack, token_inputs(cfg, per_cohort_batch, seq))
     labels = jax.tree.map(stack, label_specs(cfg, per_cohort_batch, seq))
     return {"inputs": inputs, "labels": labels}
+
+
+# =========================================================================== #
+# static-analysis registry: traceable round programs (see repro.analysis)
+# =========================================================================== #
+def abstract_like(tree):
+    """``ShapeDtypeStruct`` tree matching what ``jnp.asarray`` would make of
+    ``tree``'s leaves (canonicalized dtypes: f64 -> f32 off-x64) WITHOUT
+    materializing any device array — the auditor traces programs on these,
+    it never runs them."""
+    from jax import dtypes as _dtypes
+
+    def conv(x):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            return jax.ShapeDtypeStruct(
+                tuple(x.shape), _dtypes.canonicalize_dtype(x.dtype))
+        a = np.asarray(x)
+        return jax.ShapeDtypeStruct(
+            a.shape, _dtypes.canonicalize_dtype(a.dtype))
+
+    return jax.tree.map(conv, tree)
+
+
+def shard_abstract(sds_tree, shardings):
+    """Attach a NamedSharding tree to a ShapeDtypeStruct tree so ``lower``
+    sees the same placements ``device_put`` would commit at run time."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shardings)
+
+
+@dataclasses.dataclass
+class RoundProgramSpec:
+    """One traceable round program plus the contracts it must satisfy.
+
+    The backends contribute these via ``trace_specs`` /
+    ``full_reference_spec``; ``repro.analysis`` lowers and compiles them
+    (``.lower()`` — pure tracing, no execution) to machine-check the
+    collective / memory / donation / purity invariants the docs claim.
+
+    kind            : "round" (local training fused with Eq. 1),
+                      "local" (no aggregation — zero data-axis collectives
+                      allowed), "aggregation" (the bare Eq. 1 seam),
+                      "step" (one client step), "reference" (full-model
+                      program the per-stage memory peaks must undercut).
+    donate_argnums  : donation the runtime *intends* (applied only where
+                      ``donation_supported()``) — the donation audit
+                      re-lowers with it forced on.
+    alias_argnums   : subset of ``donate_argnums`` that MUST alias an
+                      output (threaded state); the rest are opportunistic
+                      scratch donations (e.g. the batch stack) whose
+                      "not usable" is informational.
+    n_agg_leaves    : leaf count of the Eq. 1 contraction — bounds the
+                      legal number of data-axis all-reduces.
+    """
+
+    name: str
+    backend: str
+    kind: str
+    fn: Any
+    abstract_args: tuple
+    jit_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    donate_argnums: tuple = ()
+    alias_argnums: tuple = ()
+    mesh: Any = None
+    data_axis: Optional[str] = None
+    model_axis: Optional[str] = None
+    stage: Optional[int] = None
+    n_agg_leaves: int = 0
+
+    def jit(self, *, donate: bool = False, keep_unused: bool = False):
+        kw = dict(self.jit_kwargs)
+        if donate and self.donate_argnums:
+            kw["donate_argnums"] = self.donate_argnums
+        if keep_unused:
+            kw["keep_unused"] = True
+        return jax.jit(self.fn, **kw)
+
+    def lower(self, **kw):
+        """Trace the program on its abstract args (never executes)."""
+        return self.jit(**kw).lower(*self.abstract_args)
 
 
 # =========================================================================== #
@@ -290,6 +444,31 @@ class ClientRuntime:
             num_samples=[float(w) for w in stack.weights],
             **extras)
 
+    # -- static-analysis registry hooks (repro.analysis) ------------------- #
+    def _abstract_stack(self, stack: RoundStack):
+        return (abstract_like(stack.batches),
+                abstract_like(np.asarray(stack.weights)),
+                abstract_like(np.asarray(stack.step_mask)))
+
+    def trace_specs(self, params, t: int,
+                    stack: RoundStack) -> List[RoundProgramSpec]:
+        """This backend's stage-``t`` programs as traceable specs shaped
+        like ``stack`` — the auditor's registry entry point."""
+        raise NotImplementedError
+
+    def full_reference_spec(self, params,
+                            stack: RoundStack) -> RoundProgramSpec:
+        """Full-model (vanilla FedAvg) round on the same stack: the memory
+        reference every per-stage peak must undercut."""
+        batches, weights, mask = self._abstract_stack(stack)
+        model = {"model": params["model"]}
+        return RoundProgramSpec(
+            name=f"{self.name}/full-model-round", backend=self.name,
+            kind="reference",
+            fn=make_full_round_program(self.adapter, self.optimizer),
+            abstract_args=(abstract_like(model), batches, weights, mask),
+            n_agg_leaves=len(jax.tree.leaves(model)))
+
 
 class SequentialRuntime(ClientRuntime):
     """Reference backend: clients one-by-one, one jitted step per batch.
@@ -379,6 +558,33 @@ class SequentialRuntime(ClientRuntime):
             num_batches=num_batches,
             num_samples=num_samples)
 
+    # -- static-analysis registry ------------------------------------------ #
+    def trace_specs(self, params, t, stack):
+        frozen, trainable = self.adapter.split_stage(params, t)
+        tr, fr = abstract_like(trainable), abstract_like(frozen)
+        batch = abstract_like(
+            jax.tree.map(lambda x: x[0, 0], stack.batches))
+        opt = jax.eval_shape(self.optimizer.init, tr)
+        return [RoundProgramSpec(
+            name=f"sequential/stage{t}/step", backend=self.name,
+            kind="step",
+            fn=make_stage_step(self.adapter, self.optimizer, self.hp, t),
+            abstract_args=(opt, tr, fr, batch, tr),
+            donate_argnums=(0,), alias_argnums=(0,), stage=t)]
+
+    def full_reference_spec(self, params, stack):
+        model = {"model": params["model"]}
+        p = abstract_like(model)
+        opt = jax.eval_shape(self.optimizer.init, p)
+        batch = abstract_like(
+            jax.tree.map(lambda x: x[0, 0], stack.batches))
+        return RoundProgramSpec(
+            name="sequential/full-model-step", backend=self.name,
+            kind="reference",
+            fn=make_full_step(self.adapter, self.optimizer),
+            abstract_args=(opt, p, batch),
+            donate_argnums=(0,), alias_argnums=(0,))
+
 
 class VectorizedRuntime(ClientRuntime):
     """One jitted program per stage: vmapped scan + fused Eq. 1 einsum.
@@ -405,6 +611,19 @@ class VectorizedRuntime(ClientRuntime):
     def _run_stack(self, t, trainable, frozen, stack: RoundStack):
         batches, weights, mask = self._device_stack(stack)
         return self._program(t)(trainable, frozen, batches, weights, mask)
+
+    # -- static-analysis registry ------------------------------------------ #
+    def trace_specs(self, params, t, stack):
+        frozen, trainable = self.adapter.split_stage(params, t)
+        batches, weights, mask = self._abstract_stack(stack)
+        return [RoundProgramSpec(
+            name=f"{self.name}/stage{t}/round", backend=self.name,
+            kind="round",
+            fn=make_round_program(self.adapter, self.optimizer, self.hp, t),
+            abstract_args=(abstract_like(trainable), abstract_like(frozen),
+                           batches, weights, mask),
+            donate_argnums=(2,), stage=t,
+            n_agg_leaves=len(jax.tree.leaves(trainable)))]
 
 
 # =========================================================================== #
@@ -593,6 +812,157 @@ class ShardedRuntime(VectorizedRuntime):
         metrics = dict(metrics,
                        cohort_losses=metrics["cohort_losses"][:C])
         return new_trainable, metrics
+
+    # -- static-analysis registry ------------------------------------------ #
+    def _abstract_stack(self, stack: RoundStack):
+        batches, weights, mask = super()._abstract_stack(stack)
+        pad = (-stack.num_cohorts) % self._shards
+
+        def grow(s):
+            return jax.ShapeDtypeStruct((s.shape[0] + pad, *s.shape[1:]),
+                                        s.dtype)
+
+        if pad:
+            batches = jax.tree.map(grow, batches)
+            weights, mask = grow(weights), grow(mask)
+        return batches, weights, mask
+
+    def _abstract_stack_placed(self, t: int, stack: RoundStack):
+        """Abstract stack carrying the shardings ``place_inputs`` commits."""
+        from jax.sharding import NamedSharding
+
+        from repro.launch.sharding import batch_spec
+        batches, weights, mask = self._abstract_stack(stack)
+        _, _, cohort_sh = self._place.placements(t)
+        batches = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(
+                    self.mesh, batch_spec(s.shape, self.mesh))), batches)
+        weights = jax.ShapeDtypeStruct(weights.shape, weights.dtype,
+                                       sharding=cohort_sh)
+        mask = jax.ShapeDtypeStruct(mask.shape, mask.dtype,
+                                    sharding=cohort_sh)
+        return batches, weights, mask
+
+    def _seam_spec(self, t: int, trainable, n_cohorts: int):
+        """The bare Eq. 1 aggregation over stacked per-cohort locals — the
+        spec whose lowered module must contain ONLY data-axis all-reduces
+        (one per aggregated leaf plus the scalar normalizer/loss)."""
+        from jax.sharding import PartitionSpec as P
+        tr_sds = abstract_like(trainable)
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_cohorts, *s.shape), s.dtype),
+            tr_sds)
+        vec = jax.ShapeDtypeStruct((n_cohorts,), jnp.float32)
+        n_leaves = len(jax.tree.leaves(trainable))
+        if self.model_shards > 1:
+            from repro.launch.sharding import replicated
+            locals_sh = self._place.stacked_locals(t)
+            tr_sh, _, cohort_sh = self._place.placements(t)
+            stacked = shard_abstract(stacked, locals_sh)
+
+            def seam(locals_, weights, losses):
+                return eq1_aggregate(locals_, weights, losses,
+                                     locals_shardings=locals_sh)
+
+            return RoundProgramSpec(
+                name=f"sharded2d/stage{t}/eq1-seam", backend=self.name,
+                kind="aggregation", fn=seam,
+                abstract_args=(
+                    stacked,
+                    jax.ShapeDtypeStruct(vec.shape, vec.dtype,
+                                         sharding=cohort_sh),
+                    jax.ShapeDtypeStruct(vec.shape, vec.dtype,
+                                         sharding=cohort_sh)),
+                jit_kwargs={"out_shardings": (tr_sh,
+                                              replicated(self.mesh))},
+                mesh=self.mesh, data_axis=self.axis,
+                model_axis=self.model_axis, stage=t,
+                n_agg_leaves=n_leaves)
+        from jax.experimental.shard_map import shard_map
+        seam = shard_map(
+            lambda l, w, s: eq1_aggregate(l, w, s, axis=self.axis),
+            mesh=self.mesh,
+            in_specs=(P(self.axis), P(self.axis), P(self.axis)),
+            out_specs=(P(), P()), check_rep=False)
+        return RoundProgramSpec(
+            name=f"sharded1d/stage{t}/eq1-seam", backend=self.name,
+            kind="aggregation", fn=seam,
+            abstract_args=(stacked, vec, vec),
+            mesh=self.mesh, data_axis=self.axis, stage=t,
+            n_agg_leaves=n_leaves)
+
+    def trace_specs(self, params, t, stack):
+        frozen, trainable = self.adapter.split_stage(params, t)
+        n_leaves = len(jax.tree.leaves(trainable))
+        if self.model_shards > 1:
+            batches, weights, mask = self._abstract_stack_placed(t, stack)
+            tr_sh, fr_sh, _ = self._place.placements(t)
+            round_spec = RoundProgramSpec(
+                name=f"sharded2d/stage{t}/round", backend=self.name,
+                kind="round", fn=self._build_2d(t),
+                abstract_args=(
+                    shard_abstract(abstract_like(trainable), tr_sh),
+                    shard_abstract(abstract_like(frozen), fr_sh),
+                    batches, weights, mask),
+                jit_kwargs={"out_shardings": self._out_sh(t)},
+                donate_argnums=(2,), mesh=self.mesh, data_axis=self.axis,
+                model_axis=self.model_axis, stage=t,
+                n_agg_leaves=n_leaves)
+        else:
+            batches, weights, mask = self._abstract_stack(stack)
+            round_spec = RoundProgramSpec(
+                name=f"sharded1d/stage{t}/round", backend=self.name,
+                kind="round", fn=self._build_1d(t),
+                abstract_args=(abstract_like(trainable),
+                               abstract_like(frozen), batches, weights,
+                               mask),
+                donate_argnums=(2,), mesh=self.mesh, data_axis=self.axis,
+                stage=t, n_agg_leaves=n_leaves)
+        return [round_spec,
+                self._seam_spec(t, trainable, weights.shape[0])]
+
+    def full_reference_spec(self, params, stack):
+        spec = super().full_reference_spec(params, stack)
+        if self.model_shards > 1:
+            # place the full-model reference on the same mesh: params and
+            # locals model-shard exactly as the per-stage programs do, so
+            # the peak-bytes comparison is like for like
+            from jax.sharding import NamedSharding
+
+            from repro.launch.sharding import (batch_spec, replicated,
+                                               stacked_tree_shardings,
+                                               tree_shardings)
+            model_defs = {"model": self.adapter.defs["model"]}
+            p_sh = tree_shardings(model_defs, self.mesh)
+            locals_sh = stacked_tree_shardings(model_defs, self.mesh,
+                                               self.axis)
+            fn = make_full_round_program(self.adapter, self.optimizer,
+                                         locals_shardings=locals_sh)
+            p, batches, weights, mask = spec.abstract_args
+            _, _, cohort_sh = self._place.placements(0)
+            batches = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=NamedSharding(
+                        self.mesh, batch_spec(s.shape, self.mesh))),
+                batches)
+            weights = jax.ShapeDtypeStruct(weights.shape, weights.dtype,
+                                           sharding=cohort_sh)
+            mask = jax.ShapeDtypeStruct(mask.shape, mask.dtype,
+                                        sharding=cohort_sh)
+            spec = dataclasses.replace(
+                spec, fn=fn,
+                abstract_args=(shard_abstract(p, p_sh), batches, weights,
+                               mask),
+                jit_kwargs={"out_shardings": (
+                    p_sh, {"mean_local_loss": replicated(self.mesh),
+                           "cohort_losses": cohort_sh})},
+                mesh=self.mesh, data_axis=self.axis,
+                model_axis=self.model_axis)
+        else:
+            spec = dataclasses.replace(spec, mesh=self.mesh,
+                                       data_axis=None)
+        return spec
 
 
 # =========================================================================== #
@@ -1130,6 +1500,87 @@ class AsyncBufferedRuntime(ClientRuntime):
         # synchronous straggler wall-clock for a barrier it never had
         return {"round_sim_time": 0.0,
                 "sim_times": [0.0] * stack.num_cohorts}
+
+    # -- static-analysis registry ------------------------------------------ #
+    def trace_specs(self, params, t, stack):
+        frozen, trainable = self.adapter.split_stage(params, t)
+        tr, fr = abstract_like(trainable), abstract_like(frozen)
+        batches, _, mask = self._abstract_stack(stack)
+        n_leaves = len(jax.tree.leaves(trainable))
+        local_fn = make_local_program(self.adapter, self.optimizer,
+                                      self.hp, t)
+        jit_kwargs = {}
+        mesh_kwargs = {}
+        if self.mesh is not None:
+            pad = (-stack.num_cohorts) % self.mesh.shape[self.axis]
+
+            def grow(s):
+                return jax.ShapeDtypeStruct(
+                    (s.shape[0] + pad, *s.shape[1:]), s.dtype)
+
+            from jax.sharding import NamedSharding
+
+            from repro.launch.sharding import batch_spec
+            tr_sh, fr_sh, cohort_sh = self._place.placements(t)
+            if pad:
+                batches = jax.tree.map(grow, batches)
+                mask = grow(mask)
+            batches = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=NamedSharding(
+                        self.mesh, batch_spec(s.shape, self.mesh))),
+                batches)
+            mask = jax.ShapeDtypeStruct(mask.shape, mask.dtype,
+                                        sharding=cohort_sh)
+            tr = shard_abstract(tr, tr_sh)
+            fr = shard_abstract(fr, fr_sh)
+            jit_kwargs = {"out_shardings": (self._place.stacked_locals(t),
+                                            cohort_sh)}
+            mesh_kwargs = {"mesh": self.mesh, "data_axis": self.axis,
+                           "model_axis": self.model_axis}
+        specs = [RoundProgramSpec(
+            name=f"async/stage{t}/local", backend=self.name, kind="local",
+            fn=local_fn, abstract_args=(tr, fr, batches, mask),
+            jit_kwargs=jit_kwargs, donate_argnums=(2,), stage=t,
+            n_agg_leaves=0, **mesh_kwargs)]
+        specs.append(self._flush_spec(t, trainable, mask.shape[0],
+                                      mesh_kwargs))
+        return specs
+
+    def _flush_spec(self, t, trainable, n_entries, mesh_kwargs):
+        """The buffered-flush aggregation seam: one ``stacked_weighted_
+        average`` einsum over a (K,) f32 delta buffer.  Weights/staleness
+        are host-side at flush time, so the traced program's only
+        data-axis collectives are the per-leaf Eq. 1 all-reduces."""
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (n_entries, *np.shape(s)), jnp.float32),
+            abstract_like(trainable))
+        weights = [1.0] * n_entries
+        staleness = [0] * n_entries
+        schedule, alpha = self.staleness_schedule, self.staleness_alpha
+
+        def flush(stacked_deltas):
+            update, _ = agg.buffered_flush_average(
+                stacked_deltas, weights, staleness,
+                schedule=schedule, alpha=alpha)
+            return update
+
+        jit_kwargs = {}
+        if self.mesh is not None:
+            from repro.launch.sharding import stacked_tree_shardings
+            frozen_defs, trainable_defs = self.adapter.split_stage(
+                self.adapter.defs, t)
+            del frozen_defs
+            stacked = shard_abstract(
+                stacked, stacked_tree_shardings(trainable_defs, self.mesh,
+                                                self.axis))
+            jit_kwargs = {"out_shardings": self._place.placements(t)[0]}
+        return RoundProgramSpec(
+            name=f"async/stage{t}/flush-seam", backend=self.name,
+            kind="aggregation", fn=flush, abstract_args=(stacked,),
+            jit_kwargs=jit_kwargs, stage=t,
+            n_agg_leaves=len(jax.tree.leaves(trainable)), **mesh_kwargs)
 
 
 RUNTIMES = {"sequential": SequentialRuntime,

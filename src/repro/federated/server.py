@@ -27,6 +27,8 @@ import jax
 import numpy as np
 
 from repro import optim
+from repro.checkpoint import (latest_checkpoint, load_checkpoint,
+                              read_checkpoint_meta, save_checkpoint)
 from repro.core import (CurriculumHP, PlateauSchedule, RoundRobinSchedule,
                         SequentialSchedule)
 from repro.core.memory import estimate_full_memory, estimate_stage_memory
@@ -34,8 +36,6 @@ from repro.data.loader import Batcher
 from repro.federated import aggregation as agg
 from repro.federated.client import dropout_prob, sample_fault_steps
 from repro.federated.devices import Fleet, MaterializedFleet
-from repro.checkpoint import (latest_checkpoint, load_checkpoint,
-                              read_checkpoint_meta, save_checkpoint)
 from repro.federated.runtime import (AsyncBufferedRuntime, AsyncServerState,
                                      ClientRuntime, make_runtime)
 from repro.federated.selection import SelectionPolicy, make_policy
@@ -254,7 +254,12 @@ class NeuLiteServer:
             n_up = (out.n_uploads if out.n_uploads is not None
                     else len(selected))
             upload = agg.tree_bytes(out.trainable) * n_up
-            mean_loss = float(out.mean_loss)     # the round's one host sync
+            # the round's ONE host sync: mean loss and the per-cohort
+            # losses the selection policy needs come over together
+            # (hostsync audit gates this — see repro.analysis)
+            mean_loss_h, cohort_losses_h = jax.device_get(
+                (out.mean_loss, out.cohort_losses))
+            mean_loss = float(mean_loss_h)
             if out.round_sim_time is not None:
                 # async: the round spans from open to its last buffer flush
                 # on the server's ABSOLUTE virtual clock (0 when deliveries
@@ -267,8 +272,7 @@ class NeuLiteServer:
             # feed the round's per-cohort losses back to the policy (Oort's
             # statistical utility); losses arrive in selected-cohort order
             self.selector.observe(
-                selected,
-                np.asarray(out.cohort_losses)[:len(selected)], r)
+                selected, np.asarray(cohort_losses_h)[:len(selected)], r)
         else:
             upload, mean_loss, sim_times = 0, float("nan"), []
 
@@ -499,8 +503,9 @@ class NeuLiteServer:
         labels = np.stack([pad0(b["labels"]) for b in batches])
         # padded rows get mask=False: excluded from numerator & denominator
         mask = np.stack([pad0(valid_mask(b)) for b in batches])
-        correct, total = self._eval_program()(self.params, inputs, labels,
-                                              mask)
+        # one host sync for the whole evaluation (hostsync audit gates this)
+        correct, total = jax.device_get(
+            self._eval_program()(self.params, inputs, labels, mask))
         return int(correct) / max(int(total), 1)
 
     def _eval_program(self):

@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.slstm_scan.kernel import slstm_scan_pallas
 from repro.kernels.slstm_scan.ref import slstm_scan_ref

@@ -13,7 +13,6 @@ constants (mesh.py).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict
 

@@ -18,7 +18,6 @@ caches, the sequence dim picks up the data axis instead (rule 3).
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import numpy as np

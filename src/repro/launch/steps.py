@@ -8,7 +8,6 @@ materialized arrays.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -17,9 +16,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
 from repro.common import paramdef as PD
-from repro.configs import (SHAPES, cache_specs, decode_inputs, input_specs,
-                           label_specs, resolve_config, token_inputs)
-from repro.core import CurriculumHP, make_stage_step, make_full_step, \
+from repro.configs import (SHAPES, decode_inputs, label_specs,
+                           resolve_config, token_inputs)
+from repro.core import CurriculumHP, make_full_step, make_stage_step, \
     make_transformer_adapter
 from repro.launch.sharding import (batch_shardings, fit_spec, replicated,
                                    tree_shardings)

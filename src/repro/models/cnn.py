@@ -266,7 +266,7 @@ def cnn_surrogate_defs(cfg: CNNConfig, block_bounds: List[Tuple[int, int]]):
     block's output channels."""
     metas = unit_meta(cfg)
     sur = []
-    for (s0, e0), (s1, e1) in zip(block_bounds[:-1], block_bounds[1:]):
+    for (_s0, e0), (_s1, e1) in zip(block_bounds[:-1], block_bounds[1:]):
         cin = metas[e0 - 1][1]["cout"]
         cout = metas[e1 - 1][1]["cout"]
         sur.append({"conv": conv_defs(cin, cout), "gn": gn_defs(cout)})

@@ -11,7 +11,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.common.paramdef import ParamDef
-from repro.models.config import ModelConfig
 
 # Logical mesh axes used across the framework:
 #   "data"  — batch / client cohort axis (and "pod" stacks on top of it)

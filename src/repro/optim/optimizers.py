@@ -7,7 +7,6 @@ claims for frozen blocks falls out of the state shape, not a mask.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

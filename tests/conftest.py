@@ -56,9 +56,9 @@ except ModuleNotFoundError:
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
 
-import jax
-import numpy as np
-import pytest
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 
 def pytest_configure(config):

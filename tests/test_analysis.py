@@ -1,0 +1,374 @@
+"""Round-program auditor: each check must catch its deliberately-broken
+toy program with an actionable, op-naming diagnostic — and stay silent on
+clean ones."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import collectives as col
+from repro.analysis import donation as don
+from repro.analysis import hostsync as hs
+from repro.analysis.report import Report
+from repro.federated.runtime import RoundProgramSpec, abstract_like
+
+# --------------------------------------------------------------------------- #
+# replica-group parsing: all three textual forms XLA emits
+# --------------------------------------------------------------------------- #
+def test_expand_iota_groups_plain_and_transposed():
+    # [4,2]<=[8]: consecutive pairs
+    assert col.expand_iota_groups("4,2", "8", None) == \
+        [[0, 1], [2, 3], [4, 5], [6, 7]]
+    # [2,4]<=[4,2]T(1,0): stride-2 groups (data-axis groups of a 4x2 mesh)
+    assert col.expand_iota_groups("2,4", "4,2", "1,0") == \
+        [[0, 2, 4, 6], [1, 3, 5, 7]]
+
+
+def test_parse_collective_ops_literal_iota_and_pairs():
+    hlo = """
+HloModule toy
+%loop_body (p: f32[4]) -> f32[4] {
+  %ar.1 = f32[4] all-reduce(%x), replica_groups={{0,2,4,6},{1,3,5,7}},\
+ metadata={op_name="x" source_file="/a/b/runtime.py" source_line=42}
+}
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %ag.0 = f32[8] all-gather(%p), replica_groups=[4,2]<=[8], dimensions={0}
+  %cp.0 = f32[4] collective-permute(%p), source_target_pairs={{0,1},{1,0}}
+  ROOT %ar.2 = f32[4] all-reduce(%p), replica_groups={}
+}
+"""
+    ops = {op.name: op for op in col.parse_collective_ops(hlo, 8)}
+    assert set(ops) == {"ar.1", "ag.0", "cp.0", "ar.2"}
+    assert not ops["ar.1"].in_entry and ops["ag.0"].in_entry
+    assert ops["ar.1"].groups == [[0, 2, 4, 6], [1, 3, 5, 7]]
+    assert ops["ar.1"].source == "runtime.py:42"
+    assert ops["ag.0"].groups == [[0, 1], [2, 3], [4, 5], [6, 7]]
+    assert ops["cp.0"].groups == [[0, 1], [1, 0]]
+    assert ops["ar.2"].groups == [list(range(8))]   # empty = all devices
+
+
+def test_crossed_axes_on_2d_grid():
+    ids = np.arange(8).reshape(4, 2)        # data=4 x model=2
+    coords = col.device_coords(ids, ("data", "model"))
+    assert col.crossed_axes([[0, 2, 4, 6]], coords, ("data", "model")) \
+        == ("data",)
+    assert col.crossed_axes([[0, 1]], coords, ("data", "model")) \
+        == ("model",)
+    assert col.crossed_axes([list(range(8))], coords, ("data", "model")) \
+        == ("data", "model")
+
+
+# --------------------------------------------------------------------------- #
+# collective rules on synthetic HLO (no devices needed: fake mesh)
+# --------------------------------------------------------------------------- #
+def _fake_mesh():
+    return types.SimpleNamespace(devices=np.arange(8).reshape(4, 2),
+                                 axis_names=("data", "model"),
+                                 shape={"data": 4, "model": 2})
+
+
+def _spec(kind, n_agg_leaves=0, name="toy/round"):
+    return RoundProgramSpec(name=name, backend="toy", kind=kind,
+                            fn=None, abstract_args=(), mesh=_fake_mesh(),
+                            data_axis="data", model_axis="model",
+                            n_agg_leaves=n_agg_leaves)
+
+
+_DATA_AR = ("%ar.0 = f32[4] all-reduce(%p), "
+            "replica_groups={{0,2,4,6},{1,3,5,7}}")
+
+
+def test_gratuitous_allgather_over_data_axis_is_caught():
+    hlo = ("ENTRY %main (p: f32[4]) -> f32[4] {\n"
+           "  %gather.bad = f32[16] all-gather(%p), "
+           "replica_groups={{0,2,4,6},{1,3,5,7}}, dimensions={0}, "
+           'metadata={source_file="runtime.py" source_line=7}\n'
+           f"  ROOT {_DATA_AR}\n}}\n")
+    report = Report()
+    col.audit_collectives(_spec("round", n_agg_leaves=1), hlo, report)
+    assert not report.ok()
+    [f] = [f for f in report.errors
+           if f.check == "collectives.data-axis-gather"]
+    assert "gather.bad" in f.location         # names the offending op
+    assert "runtime.py:7" in f.location       # ...and where it came from
+    assert "all-gather" in f.message and "data" in f.message
+
+
+def test_model_axis_collectives_are_legal_in_round_programs():
+    hlo = ("ENTRY %main (p: f32[4]) -> f32[4] {\n"
+           "  %ag.tp = f32[8] all-gather(%p), replica_groups=[4,2]<=[8], "
+           "dimensions={0}\n"
+           "  %cp.halo = f32[4] collective-permute(%p), "
+           "source_target_pairs={{0,1},{1,0},{2,3},{3,2}}\n"
+           f"  ROOT {_DATA_AR}\n}}\n")
+    report = Report()
+    summary = col.audit_collectives(_spec("round", n_agg_leaves=1), hlo,
+                                    report)
+    assert report.ok(), report.render()
+    assert summary["data_axis_all_reduces"] == 1
+    assert summary["by_kind"]["all-gather[model]"] == 1
+
+
+def test_data_allreduce_inside_scan_body_is_caught():
+    hlo = ("%body (p: f32[4]) -> f32[4] {\n"
+           f"  ROOT {_DATA_AR}\n}}\n"
+           "ENTRY %main (p: f32[4]) -> f32[4] {\n"
+           f"  ROOT {_DATA_AR.replace('ar.0', 'ar.1')}\n}}\n")
+    report = Report()
+    col.audit_collectives(_spec("round", n_agg_leaves=1), hlo, report)
+    checks = {f.check for f in report.errors}
+    assert "collectives.data-axis-in-loop" in checks
+    [f] = [f for f in report.errors
+           if f.check == "collectives.data-axis-in-loop"]
+    assert "%ar.0" in f.location and "%body" in f.location
+
+
+def test_local_program_may_not_cross_data_axis():
+    hlo = f"ENTRY %main (p: f32[4]) -> f32[4] {{\n  ROOT {_DATA_AR}\n}}\n"
+    report = Report()
+    col.audit_collectives(_spec("local", name="toy/local"), hlo, report)
+    assert {f.check for f in report.errors} == \
+        {"collectives.local-data-crossing"}
+
+
+def test_seam_must_be_pure_allreduce_and_count_bounded():
+    # a reduce-scatter in the seam AND zero data all-reduces (leaves=2)
+    hlo = ("ENTRY %main (p: f32[4]) -> f32[4] {\n"
+           "  ROOT %rs.0 = f32[1] reduce-scatter(%p), "
+           "replica_groups={{0,2,4,6},{1,3,5,7}}, dimensions={0}\n}\n")
+    report = Report()
+    col.audit_collectives(_spec("aggregation", n_agg_leaves=2,
+                                name="toy/seam"), hlo, report)
+    checks = {f.check for f in report.errors}
+    assert "collectives.seam-non-allreduce" in checks
+    assert "collectives.data-axis-gather" in checks
+    assert "collectives.eq1-allreduce-count" in checks
+
+
+def test_clean_seam_passes():
+    hlo = ("ENTRY %main (p: f32[4]) -> f32[4] {\n"
+           f"  {_DATA_AR}\n"
+           f"  ROOT {_DATA_AR.replace('ar.0', 'ar.1')}\n}}\n")
+    report = Report()
+    col.audit_collectives(_spec("aggregation", n_agg_leaves=2,
+                                name="toy/seam"), hlo, report)
+    assert report.ok(), report.render()
+
+
+# --------------------------------------------------------------------------- #
+# host-sync: dynamic probe + static purity walk
+# --------------------------------------------------------------------------- #
+def test_transfer_probe_catches_hidden_float_sync():
+    def leaky_driver(x):
+        y = jnp.sum(x)
+        return float(y)                     # the hidden per-round sync
+
+    with hs.transfer_probe() as probe:
+        leaky_driver(jnp.ones(4))
+    assert len(probe.unsanctioned) == 1
+    assert "ArrayImpl.__float__" in probe.unsanctioned[0]
+    assert "test_analysis.py" in probe.unsanctioned[0]   # blames the caller
+
+    report = Report()
+    hs._report_events(probe, report, program="toy.run_round",
+                      expect_gets=0, what="toy driver")
+    [f] = report.errors
+    assert f.check == "hostsync.hidden-transfer"
+    assert "jax.device_get" in f.message     # tells you the fix
+
+
+def test_transfer_probe_catches_np_asarray_and_sanctions_device_get():
+    with hs.transfer_probe() as probe:
+        x = jnp.arange(3)
+        np.asarray(x)                        # unsanctioned
+        jax.device_get(x)                    # the one blessed sync
+        np.asarray(np.ones(3))               # host->host: not a transfer
+    assert len(probe.unsanctioned) == 1
+    assert "np.asarray" in probe.unsanctioned[0]
+    assert len(probe.device_gets) == 1
+
+
+def test_probe_restores_patches():
+    before = jax.device_get
+    with hs.transfer_probe():
+        pass
+    assert jax.device_get is before
+    assert float(jnp.ones(())) == 1.0        # dunder restored
+
+
+def test_purity_walk_flags_callback_with_location():
+    def noisy(x):
+        jax.debug.print("x={x}", x=x)        # host callback in hot path
+        return x * 2
+
+    spec = RoundProgramSpec(name="toy/noisy", backend="toy", kind="round",
+                            fn=noisy,
+                            abstract_args=(abstract_like(jnp.ones(4)),))
+    report = Report()
+    hs.purity_findings(spec, report)
+    [f] = [f for f in report.errors if f.check == "hostsync.callback"]
+    assert "callback" in f.message
+    assert f.location and "test_analysis.py" in f.location
+
+
+def test_purity_walk_flags_f64_promotion():
+    from jax.experimental import enable_x64
+
+    def promoting(x):
+        return x * np.float64(2.0)           # silent f64 under x64 mode
+
+    spec = RoundProgramSpec(name="toy/f64", backend="toy", kind="round",
+                            fn=promoting,
+                            abstract_args=(jax.ShapeDtypeStruct(
+                                (4,), jnp.float64),))
+    report = Report()
+    with enable_x64():
+        hs.purity_findings(spec, report)
+    findings = [f for f in report.errors
+                if f.check == "hostsync.f64-promotion"]
+    assert findings and "float64" in findings[0].message
+
+
+def test_purity_walk_reports_trace_failure_not_crash():
+    def branchy(x):
+        if x.sum() > 0:                      # Python branch on traced value
+            return x
+        return -x
+
+    spec = RoundProgramSpec(name="toy/branchy", backend="toy",
+                            kind="round", fn=branchy,
+                            abstract_args=(abstract_like(jnp.ones(4)),))
+    report = Report()
+    hs.purity_findings(spec, report)
+    [f] = report.errors
+    assert f.check == "hostsync.trace-failure"
+    assert "branching" in f.message
+
+
+# --------------------------------------------------------------------------- #
+# donation
+# --------------------------------------------------------------------------- #
+def test_parse_alias_params_and_ranges():
+    hlo = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+           "{1}: (2, {}, must-alias) }\n")
+    assert don.parse_alias_params(hlo) == [0, 2]
+    args = ({"a": jnp.ones(2), "b": jnp.ones(2)}, jnp.ones(3))
+    assert don.flat_param_ranges(args) == [(0, 2), (2, 3)]
+
+
+def test_undonated_must_alias_arg_is_caught(monkeypatch):
+    # force the hard gate, then hand XLA a donation it must drop: no
+    # output shares the donated state's f32[3] shape, so the alias table
+    # cannot cover param 0 — the error path a GPU/TPU run would take when
+    # a threaded-state donation is dropped
+    monkeypatch.setattr(don, "donation_supported", lambda: True)
+
+    def step(state, x):
+        return state.sum() * 0.9, x @ x       # f32[3] state has no alias
+
+    spec = RoundProgramSpec(
+        name="toy/step", backend="toy", kind="step", fn=step,
+        abstract_args=(abstract_like(jnp.ones(3)),
+                       abstract_like(jnp.ones(4))),
+        donate_argnums=(0,), alias_argnums=(0,))
+    report = Report()
+    summary = don.audit_donation(spec, report)
+    [f] = [f for f in report.errors
+           if f.check == "donation.must-alias-dropped"]
+    assert "argument 0" in f.message
+    assert "doubling live bytes" in f.message
+    assert summary["aliased_flat_params"] == []
+
+
+def test_dropped_donation_downgrades_to_warning_on_cpu():
+    # same dropped donation, hard gate off (CPU): unverifiable, not fatal
+    def step(state, x):
+        return state.sum() + x.sum()          # f32[3] state has no alias
+
+    spec = RoundProgramSpec(
+        name="toy/step", backend="toy", kind="step", fn=step,
+        abstract_args=(abstract_like(jnp.ones(3)),
+                       abstract_like(jnp.ones(4))),
+        donate_argnums=(0,), alias_argnums=(0,))
+    report = Report()
+    don.audit_donation(spec, report)
+    if jax.default_backend() == "cpu":
+        assert report.ok()
+        assert any(f.check == "donation.unverifiable"
+                   for f in report.findings)
+
+
+def test_honored_donation_passes_verifiably():
+    # dtype/shape-matched threaded state: XLA aliases it even on CPU and
+    # the audit passes with the alias visible in the summary
+    def step(state, x):
+        return state * 0.9 + x.sum(), x @ x
+
+    spec = RoundProgramSpec(
+        name="toy/step", backend="toy", kind="step", fn=step,
+        abstract_args=(abstract_like(jnp.ones(())),
+                       abstract_like(jnp.ones(4))),
+        donate_argnums=(0,), alias_argnums=(0,))
+    report = Report()
+    summary = don.audit_donation(spec, report)
+    assert report.ok()
+    if 0 in summary["aliased_flat_params"]:   # alias table present
+        assert not any(f.check == "donation.unverifiable"
+                       for f in report.findings)
+
+
+# --------------------------------------------------------------------------- #
+# report / waivers
+# --------------------------------------------------------------------------- #
+def test_waiver_downgrades_exact_check_and_family():
+    r = Report(waive={"memory.stage-peak", "donation"})
+    r.add("memory.stage-peak", "x")
+    r.add("donation.must-alias-dropped", "y")
+    r.add("collectives.data-axis-gather", "z")
+    assert len(r.errors) == 1
+    assert r.errors[0].check == "collectives.data-axis-gather"
+    assert "waived" in r.findings[0].render()
+
+
+def test_report_json_roundtrip(tmp_path):
+    r = Report()
+    r.add("collectives.eq1-allreduce-count", "msg", program="p",
+          location="loc")
+    r.artifacts["memory"] = {"stages": {}}
+    p = tmp_path / "report.json"
+    r.dump_json(str(p))
+    import json
+    d = json.loads(p.read_text())
+    assert d["ok"] is False
+    assert d["findings"][0]["check"] == "collectives.eq1-allreduce-count"
+    assert d["artifacts"]["memory"] == {"stages": {}}
+
+
+# --------------------------------------------------------------------------- #
+# registry smoke: every backend's specs trace on the conftest-tiny models
+# (lower only — compiling all of them is the CI analysis job's work)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["sequential", "vectorized", "async"])
+def test_trace_specs_lower_smoke(backend, tx_setup):
+    from repro.core import CurriculumHP
+    from repro.data.loader import stack_round
+    from repro.federated.runtime import make_runtime
+    from repro.optim import sgd
+
+    adapter, params, batchers = tx_setup
+    rt = make_runtime(backend, adapter,
+                      sgd(0.05, momentum=0.9, weight_decay=5e-4),
+                      CurriculumHP(mu=0.01),
+                      **({"buffer_size": 0} if backend == "async" else {}))
+    stack = stack_round(batchers, range(len(batchers)), local_epochs=1)
+    specs = rt.trace_specs(params, 0, stack)
+    assert specs, "registry returned no programs"
+    for spec in specs:
+        spec.lower()                          # traces; never executes
+        report = Report()
+        hs.purity_findings(spec, report)
+        assert report.ok(), report.render()
+    ref = rt.full_reference_spec(params, stack)
+    ref.lower()

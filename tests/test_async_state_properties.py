@@ -20,9 +20,9 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.federated.runtime import AsyncServerState, BufferEntry
-
 import pytest
+
+from repro.federated.runtime import AsyncServerState, BufferEntry
 
 
 def _entry(state: AsyncServerState, uid: int, dt: float,

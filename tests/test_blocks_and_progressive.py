@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
-from repro.common import paramdef as PD
 from repro.core import CurriculumHP, make_plan, make_stage_step, \
     make_transformer_adapter
 from repro.core.blocks import unit_block_id
@@ -19,7 +18,7 @@ def test_plan_partitions_units(units, stages, boundary):
     # bounds tile [0, units) exactly
     assert plan.bounds[0][0] == 0
     assert plan.bounds[-1][1] == units
-    for (s0, e0), (s1, e1) in zip(plan.bounds[:-1], plan.bounds[1:]):
+    for (s0, e0), (s1, _e1) in zip(plan.bounds[:-1], plan.bounds[1:]):
         assert e0 == s1 and e0 > s0
     # near-equal block sizes
     sizes = plan.block_sizes

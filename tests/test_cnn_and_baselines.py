@@ -3,12 +3,10 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.common import paramdef as PD
-from repro.federated.baselines import (_channel_idx, _extract_submodel,
-                                       _WIDTH_LEVELS)
+from repro.federated.baselines import _channel_idx, _extract_submodel
 from repro.models import cnn as C
 
 

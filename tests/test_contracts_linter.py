@@ -1,0 +1,91 @@
+"""tools/check_contracts.py: each rule fires on a planted violation, the
+inline waiver silences it, and the real tree stays clean."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+LINTER = REPO / "tools" / "check_contracts.py"
+
+
+def run_linter(root):
+    return subprocess.run(
+        [sys.executable, str(LINTER), "--root", str(root)],
+        capture_output=True, text=True)
+
+
+def make_tree(tmp_path, src_files, test_files=None, kernels=None):
+    (tmp_path / "tests").mkdir()
+    for name, text in (test_files or {}).items():
+        (tmp_path / "tests" / name).write_text(text)
+    for rel, text in src_files.items():
+        p = tmp_path / "src" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    for kname, files in (kernels or {}).items():
+        kdir = tmp_path / "src" / "repro" / "kernels" / kname
+        kdir.mkdir(parents=True, exist_ok=True)
+        for fname, text in files.items():
+            (kdir / fname).write_text(text)
+    return tmp_path
+
+
+def test_legacy_np_random_is_caught(tmp_path):
+    make_tree(tmp_path, {"repro/federated/bad.py":
+                         "import numpy as np\nnp.random.seed(0)\n"
+                         "x = np.random.rand(4)\n"})
+    r = run_linter(tmp_path)
+    assert r.returncode == 1
+    assert r.stdout.count("CON-NPRANDOM") == 2
+    assert "bad.py:2" in r.stdout
+    assert "default_rng" in r.stdout          # says what to use instead
+
+
+def test_default_rng_is_fine(tmp_path):
+    make_tree(tmp_path, {"repro/federated/ok.py":
+                         "import numpy as np\n"
+                         "rng = np.random.default_rng(0)\n"})
+    assert run_linter(tmp_path).returncode == 0
+
+
+def test_prngkey_outside_seam_is_caught_and_waivable(tmp_path):
+    make_tree(tmp_path, {
+        "repro/core/bad.py":
+            "import jax\nk = jax.random.PRNGKey(0)\n",
+        "repro/core/waived.py":
+            "import jax\n"
+            "k = jax.random.PRNGKey(0)  # contracts: allow=CON-PRNGKEY\n",
+        "repro/federated/server.py":          # whitelisted seam
+            "import jax\nk = jax.random.PRNGKey(0)\n"})
+    r = run_linter(tmp_path)
+    assert r.returncode == 1
+    assert r.stdout.count("CON-PRNGKEY") == 1
+    assert "repro/core/bad.py:2" in r.stdout
+    assert "waived.py" not in r.stdout
+    assert "server.py:2" not in r.stdout
+
+
+def test_kernel_without_ref_or_test_is_caught(tmp_path):
+    make_tree(
+        tmp_path, {},
+        test_files={"test_kernel_good.py":
+                    "from repro.kernels.good.ref import oracle\n"},
+        kernels={
+            "norefs": {"kernel.py": "pass\n"},
+            "untested": {"kernel.py": "pass\n", "ref.py": "pass\n"},
+            "good": {"kernel.py": "pass\n", "ref.py": "pass\n"},
+        })
+    r = run_linter(tmp_path)
+    assert r.returncode == 1
+    assert "norefs/kernel.py" in r.stdout and "no ref.py" in r.stdout
+    assert "untested/ref.py" in r.stdout and "equivalence test" in r.stdout
+    assert "good" not in [line.split(":")[0]
+                          for line in r.stdout.splitlines()]
+
+
+@pytest.mark.slow
+def test_real_tree_is_clean():
+    r = run_linter(REPO)
+    assert r.returncode == 0, r.stdout

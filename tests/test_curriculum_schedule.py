@@ -1,5 +1,4 @@
 """Curriculum Mentor + Training Harmonizer schedule behaviour."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -47,7 +47,7 @@ def test_all_pairs_compiled():
 
 def test_roofline_terms_present_and_positive():
     recs = _records()
-    for key, r in recs.items():
+    for r in recs.values():
         if not r.get("ok"):
             continue
         rf = r["roofline"]
@@ -58,7 +58,7 @@ def test_roofline_terms_present_and_positive():
 
 def test_train_shapes_record_collectives():
     recs = _records()
-    for (arch, shape, mesh, mode), r in recs.items():
+    for (arch, _shape, _mesh, mode), r in recs.items():
         if mode == "train" and r.get("ok"):
             assert r["collectives"]["total_bytes"] > 0, \
                 f"{arch} train step with zero collective traffic?"

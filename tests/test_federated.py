@@ -1,18 +1,17 @@
 """Federated substrate: aggregation properties, partitioning, selection,
 and a tiny end-to-end NeuLite FL round integration test."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core import make_adapter
 from repro.data import Batcher, dirichlet_partition, iid_partition, \
     make_image_dataset
 from repro.federated import aggregation as agg
 from repro.federated.devices import sample_devices
 from repro.federated.selection import memory_feasible, random_select
 from repro.federated.server import FLConfig, NeuLiteServer
-from repro.core import make_adapter
 from repro.models.cnn import CNNConfig
 
 

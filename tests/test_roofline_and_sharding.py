@@ -3,10 +3,8 @@ sharding-policy units."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import PartitionSpec as P
 
-from repro.configs import SHAPES, get_config, resolve_config
+from repro.configs import get_config
 from repro.configs.shapes import pad_heads_for_tp
 from repro.launch import analytic
 from repro.launch.roofline import Roofline, _shape_bytes, parse_collectives
@@ -157,8 +155,6 @@ def test_padded_heads_preserve_semantics():
     # copy base weights into the padded layout: group g of 2 heads -> slots
     # [3g, 3g+1], pad slot 3g+2 zeroed in wq and wo
     import numpy as np
-    for L in range(base.num_periods):
-        pass
     wq = np.zeros(jax.tree.leaves({"x": pp["layers"]["sub0"]["mixer"]["wq"]})[0].shape, np.float32)
     src = np.asarray(params["layers"]["sub0"]["mixer"]["wq"])
     wo = np.zeros(np.asarray(pp["layers"]["sub0"]["mixer"]["wo"]).shape,

@@ -12,10 +12,10 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+import pytest
+
 from repro.data import Batcher, make_image_dataset
 from repro.data.loader import stack_round, truncate_step_mask
-
-import pytest
 
 
 def _batchers(sizes, batch_size):

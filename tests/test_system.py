@@ -6,18 +6,15 @@ Covers the paper's three headline claims at test scale:
      active subtree (communication reduction);
   3. curriculum/co-adaptation components are switchable (ablation paths).
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.common import paramdef as PD
-from repro.core import CurriculumHP, make_adapter, make_stage_step
+from repro.core import make_adapter
 from repro.core.memory import estimate_full_memory, stage_memory_table
 from repro.data import Batcher, dirichlet_partition, make_image_dataset
 from repro.federated.server import FLConfig, NeuLiteServer
 from repro.models.cnn import CNNConfig
-from repro.optim import sgd
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""AST contract linter: repo-wide RNG and kernel-provenance rules.
+
+Static rules no test can enforce (they are about code that *doesn't*
+exist yet, or about where code lives):
+
+  CON-NPRANDOM   The legacy ``np.random.*`` global-state API (``seed``,
+                 ``rand``, ``shuffle``, ...) is banned everywhere —
+                 global RNG state breaks the crash-safe checkpoint story
+                 (PR 8 serializes ``default_rng`` bit-generator states;
+                 the global RNG is invisible to it) and makes cohort
+                 sampling order depend on import order.  Use
+                 ``np.random.default_rng(seed)`` (allowed, as are
+                 ``Generator``/``SeedSequence`` references).
+
+  CON-PRNGKEY    ``jax.random.PRNGKey``/``jax.random.key`` may appear
+                 only at init seams (server/baseline constructors, launch
+                 entry points, the audit harness).  A fresh key minted
+                 inside library code is either a hidden nondeterminism
+                 (key depends on call count) or a constant masquerading
+                 as randomness; thread keys from the seam instead.
+
+  CON-KERNEL-REF Every Pallas kernel package ``src/repro/kernels/<k>/``
+                 must ship a pure-jnp ``ref.py`` AND an equivalence test
+                 (``tests/test_kernel_*.py`` importing that ref) — a
+                 kernel whose oracle is itself is not tested.
+
+Waive a finding on a specific line with ``# contracts: allow=RULE``
+(comma-separate multiple rules).  Exit 1 on any un-waived finding.
+
+Run: ``python tools/check_contracts.py [--root .]``
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import re
+import sys
+
+# init seams where minting a PRNGKey is the point (relative to src/)
+PRNGKEY_SEAMS = (
+    "repro/federated/server.py",      # NeuLiteServer.__init__(seed)
+    "repro/federated/baselines.py",   # baseline server constructors
+    "repro/launch/train.py",          # CLI entry points seed -> key
+    "repro/launch/serve.py",
+    "repro/launch/dryrun.py",
+    "repro/analysis/harness.py",      # audit-model init
+)
+
+LEGACY_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence",
+                       "BitGenerator", "PCG64", "Philox"}
+
+_ALLOW_RE = re.compile(r"#\s*contracts:\s*allow=([\w,-]+)")
+
+
+class Finding:
+    def __init__(self, rule, path, line, message):
+        self.rule, self.path, self.line, self.message = \
+            rule, path, line, message
+
+    def render(self):
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def _allowed(source_lines, lineno, rule) -> bool:
+    if 1 <= lineno <= len(source_lines):
+        m = _ALLOW_RE.search(source_lines[lineno - 1])
+        if m and rule in m.group(1).split(","):
+            return True
+    return False
+
+
+def _attr_chain(node) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def check_file(path: pathlib.Path, rel: str) -> list:
+    source = path.read_text()
+    lines = source.splitlines()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [Finding("CON-SYNTAX", rel, e.lineno or 0, str(e.msg))]
+    findings = []
+    in_seam = any(rel.endswith(s) for s in PRNGKEY_SEAMS)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        parts = chain.split(".")
+        if (len(parts) >= 3 and parts[0] in ("np", "numpy")
+                and parts[1] == "random"
+                and parts[2] not in LEGACY_NP_RANDOM_OK):
+            if not _allowed(lines, node.lineno, "CON-NPRANDOM"):
+                findings.append(Finding(
+                    "CON-NPRANDOM", rel, node.lineno,
+                    f"legacy global-state RNG call '{chain}' — use "
+                    f"np.random.default_rng(seed) so the RNG state is "
+                    f"checkpointable and import-order independent"))
+        if (chain.endswith("random.PRNGKey") or chain.endswith("random.key")
+                or chain == "PRNGKey") and not in_seam:
+            if not _allowed(lines, node.lineno, "CON-PRNGKEY"):
+                findings.append(Finding(
+                    "CON-PRNGKEY", rel, node.lineno,
+                    f"'{chain}' minted outside an init seam — thread the "
+                    f"key in from the caller (seams: "
+                    f"{', '.join(p.rsplit('/', 1)[-1] for p in PRNGKEY_SEAMS)}); "
+                    f"a key created here is invisible to checkpointing "
+                    f"and to the RNG-discipline audit"))
+    return findings
+
+
+def check_kernel_refs(root: pathlib.Path) -> list:
+    findings = []
+    kdir = root / "src" / "repro" / "kernels"
+    if not kdir.is_dir():
+        return findings
+    test_text = "\n".join(
+        p.read_text() for p in (root / "tests").glob("test_*.py"))
+    for pkg in sorted(kdir.iterdir()):
+        if not pkg.is_dir() or not (pkg / "kernel.py").exists():
+            continue
+        rel = f"src/repro/kernels/{pkg.name}"
+        if not (pkg / "ref.py").exists():
+            findings.append(Finding(
+                "CON-KERNEL-REF", f"{rel}/kernel.py", 1,
+                f"kernel package '{pkg.name}' has no ref.py — every "
+                f"Pallas kernel needs a pure-jnp oracle"))
+            continue
+        if f"repro.kernels.{pkg.name}.ref" not in test_text \
+                and f"kernels.{pkg.name} import ref" not in test_text:
+            findings.append(Finding(
+                "CON-KERNEL-REF", f"{rel}/ref.py", 1,
+                f"no test under tests/ imports "
+                f"repro.kernels.{pkg.name}.ref — add an equivalence test "
+                f"comparing the kernel against its oracle"))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=".",
+                    help="repo root (contains src/ and tests/)")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root).resolve()
+    findings = []
+    for path in sorted((root / "src").rglob("*.py")):
+        rel = str(path.relative_to(root))
+        findings.extend(check_file(path, rel))
+    findings.extend(check_kernel_refs(root))
+    for f in findings:
+        print(f.render())
+    print(f"{'FAIL' if findings else 'OK'}: {len(findings)} contract "
+          f"finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
