@@ -1,3 +1,125 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Shared seams for the Pallas kernel packages.
+
+Two things live here so every ``kernels/<family>/`` package agrees on them:
+
+* ``resolve_interpret`` — the one canonical interpret-mode resolution.
+  ``interpret=None`` means "interpret off-TPU" so CPU CI exercises the
+  real kernel path; an explicit bool passes through.  The contracts
+  linter (CON-INTERPRET) requires every ``pl.pallas_call`` site to thread
+  an ``interpret`` kwarg that originates here — no hard-coded
+  ``interpret=True`` in prod paths.
+
+* ``KernelAuditCase`` — the kernel-level mirror of the round-program
+  auditor's ``RoundProgramSpec`` seam (docs/analysis.md): each
+  ``kernels/<family>/ops.py`` exposes an ``AUDIT_CASES`` callable
+  returning cases that restate — via the same ``*_call_spec()`` builder
+  the runtime path executes, so they cannot drift — every
+  ``pallas_call``'s grid, in/out ``BlockSpec``s, index maps, scratch
+  shapes, and representative abstract operand shapes.
+  ``analysis/pallas_audit.py`` runs the static checks (write-race /
+  revisit order, block bounds & padding masks, VMEM budget, accumulation
+  dtype) over them without ever executing a kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Canonical interpret-mode switch for every Pallas call site.
+
+    ``None`` resolves to interpret mode off-TPU (the CPU container and CI
+    run the same kernel code path, lowered to plain HLO); on a real TPU
+    backend it compiles to Mosaic.  An explicit bool is passed through."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)
+
+
+def _as_tuple(x) -> tuple:
+    if x is None:
+        return ()
+    if isinstance(x, (list, tuple)):
+        return tuple(x)
+    return (x,)
+
+
+@dataclasses.dataclass
+class KernelAuditCase:
+    """One auditable ``pallas_call`` at representative abstract shapes.
+
+    ``sequential_axes`` declares the grid axes (by position) over which the
+    kernel *intentionally* revisits output blocks — the TPU-sequential
+    innermost axes carrying accumulator or last-write-wins state.  Any
+    undeclared or non-innermost revisit is a ``pallas.write-race`` finding.
+
+    ``masked`` declares that partial (padding) tiles are masked in-kernel
+    (``pl.when`` / iota masks); the auditor cross-checks the declaration
+    against the kernel source before trusting it.
+    """
+
+    family: str                       # kernel package name
+    name: str                         # case name, unique within the family
+    kernel_fn: Callable               # the pallas kernel body
+    grid: Tuple[int, ...]
+    in_avals: Tuple[jax.ShapeDtypeStruct, ...]
+    in_specs: Tuple[Any, ...]         # pl.BlockSpec per operand
+    out_avals: Tuple[jax.ShapeDtypeStruct, ...]
+    out_specs: Tuple[Any, ...]
+    scratch_shapes: Tuple[Any, ...] = ()
+    sequential_axes: Tuple[int, ...] = ()
+    masked: bool = False
+    notes: str = ""
+
+    @classmethod
+    def from_call(cls, family: str, name: str, call: dict,
+                  in_avals: Sequence[jax.ShapeDtypeStruct], *,
+                  sequential_axes: Sequence[int] = (),
+                  masked: bool = False, notes: str = "") -> "KernelAuditCase":
+        """Build a case from a ``*_call_spec()`` dict — the exact grid /
+        specs / scratch the production ``pallas_call`` consumes."""
+        out_shape = call["out_shape"]
+        return cls(
+            family=family, name=name, kernel_fn=call["kernel"],
+            grid=tuple(call["grid"]),
+            in_avals=tuple(in_avals), in_specs=_as_tuple(call["in_specs"]),
+            out_avals=tuple(jax.ShapeDtypeStruct(o.shape, o.dtype)
+                            for o in _as_tuple(out_shape)),
+            out_specs=_as_tuple(call["out_specs"]),
+            scratch_shapes=_as_tuple(call.get("scratch_shapes")),
+            sequential_axes=tuple(sequential_axes), masked=masked,
+            notes=notes)
+
+    def location(self) -> str:
+        """``file:line`` of the kernel body (functools.partial unwrapped)."""
+        fn = self.kernel_fn
+        while isinstance(fn, functools.partial):
+            fn = fn.func
+        try:
+            path = inspect.getsourcefile(fn) or "<unknown>"
+            _, line = inspect.getsourcelines(fn)
+            return f"{path}:{line}"
+        except (OSError, TypeError):
+            return "<unknown>"
+
+    def kernel_source(self) -> str:
+        """Source text of the kernel body ("" when unavailable)."""
+        fn = self.kernel_fn
+        while isinstance(fn, functools.partial):
+            fn = fn.func
+        try:
+            return inspect.getsource(fn)
+        except (OSError, TypeError):
+            return ""

@@ -88,6 +88,42 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
 
 
+def flash_call_spec(B: int, H: int, Sq_p: int, Skv_p: int, D: int, *,
+                    causal: bool, window: int, block_q: int, block_kv: int,
+                    seq_q: int, seq_kv: int, dtype=jnp.float32) -> dict:
+    """Grid / BlockSpec / scratch layout of the flash ``pallas_call``.
+
+    Single source of truth: ``flash_attention_bhsd`` executes it and the
+    kernel auditor (``analysis/pallas_audit.py``, via ``ops.AUDIT_CASES``)
+    checks it statically.  ``Sq_p`` / ``Skv_p`` are the padded (block-
+    dividing) sequence lengths; ``seq_q`` / ``seq_kv`` the true ones the
+    kernel masks against."""
+    nq, nkv = Sq_p // block_q, Skv_p // block_kv
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(D), causal=causal,
+        window=window, block_q=block_q, block_kv=block_kv, num_kv=nkv,
+        seq_q=seq_q, seq_kv=seq_kv)
+    return dict(
+        kernel=kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), dtype),
+        scratch_shapes=[
+            # (bq,) running max, (bq,) running sum, (bq, d) accumulator —
+            # VMEM-resident across the sequential kv grid dimension
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+    )
+
+
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
                          block_q: int = 128, block_kv: int = 128,
                          interpret: bool = True):
@@ -105,31 +141,13 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
     Sq_p, Skv_p = Sq + pad_q, Skv + pad_kv
-    nq, nkv = Sq_p // block_q, Skv_p // block_kv
 
-    kernel = functools.partial(
-        _flash_kernel, scale=1.0 / math.sqrt(D), causal=causal,
-        window=window, block_q=block_q, block_kv=block_kv, num_kv=nkv,
-        seq_q=Sq, seq_kv=Skv)
-
+    call = flash_call_spec(B, H, Sq_p, Skv_p, D, causal=causal,
+                           window=window, block_q=block_q, block_kv=block_kv,
+                           seq_q=Sq, seq_kv=Skv, dtype=q.dtype)
     out = pl.pallas_call(
-        kernel,
-        grid=(B, H, nq, nkv),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, qi, ki: (b, h, ki, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, qi, ki: (b, h, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, block_q, D),
-                               lambda b, h, qi, ki: (b, h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), q.dtype),
-        scratch_shapes=[
-            # (bq,) running max, (bq,) running sum, (bq, d) accumulator —
-            # VMEM-resident across the sequential kv grid dimension
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, D), jnp.float32),
-        ],
-        interpret=interpret,
+        call["kernel"], grid=call["grid"], in_specs=call["in_specs"],
+        out_specs=call["out_specs"], out_shape=call["out_shape"],
+        scratch_shapes=call["scratch_shapes"], interpret=interpret,
     )(q, k, v)
     return out[:, :, :Sq]

@@ -11,19 +11,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_bhsd
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
+from repro.kernels import KernelAuditCase, resolve_interpret
+from repro.kernels.flash_attention.kernel import (flash_attention_bhsd,
+                                                 flash_call_spec)
 
 
 def _flash_fwd_impl(q, k, v, causal, window, block_q, block_kv, interpret):
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     B, Sq, H, D = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -76,3 +70,37 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     """q: (B, Sq, H, D); k, v: (B, Skv, KV, D); H % KV == 0.
     Returns (B, Sq, H, D).  Differentiable (custom VJP, see _flash_bwd)."""
     return _flash(q, k, v, causal, window, block_q, block_kv, interpret)
+
+
+# --------------------------------------------------------------------------- #
+# kernel-audit registry (analysis/pallas_audit.py)
+# --------------------------------------------------------------------------- #
+def _flash_case(name, B, H, S, D, bq, bkv, dtype, **kw):
+    call = flash_call_spec(B, H, S, S, D, causal=kw.get("causal", True),
+                           window=kw.get("window", 0), block_q=bq,
+                           block_kv=bkv, seq_q=kw.get("seq_q", S),
+                           seq_kv=kw.get("seq_kv", S), dtype=dtype)
+    aval = jax.ShapeDtypeStruct((B, H, S, D), dtype)
+    return KernelAuditCase.from_call(
+        "flash_attention", name, call, [aval, aval, aval],
+        # kv axis (3) is the innermost, sequentially-revisited grid axis
+        # carrying the (m, l, acc) streaming-softmax state in VMEM scratch
+        sequential_axes=(3,), masked=True,
+        notes="out block revisited per kv step; kpos<seq_kv iota mask "
+              "covers kv padding, padded q rows are sliced by the wrapper")
+
+
+def AUDIT_CASES():
+    """Representative flash ``pallas_call`` layouts for the static auditor."""
+    f32, bf16 = jnp.float32, jnp.bfloat16
+    return [
+        _flash_case("fwd_f32_B2H2S1024D64", 2, 2, 1024, 64, 128, 128, f32),
+        # bf16 operands with the f32 (m, l, acc) scratch accumulators —
+        # the accumulation-dtype check's pass path on a real kernel
+        _flash_case("fwd_bf16_B2H2S512D64", 2, 2, 512, 64, 128, 128, bf16),
+        # padded layout: seq 200 -> 256 blocks of 128; in-kernel mask only
+        _flash_case("fwd_f32_pad_S200", 1, 2, 256, 64, 128, 128, f32,
+                    seq_q=200, seq_kv=200),
+        _flash_case("fwd_f32_windowed", 1, 1, 512, 32, 128, 128, f32,
+                    causal=False, window=64),
+    ]

@@ -31,5 +31,11 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
         mask &= kpos > qpos - window
     scores = jnp.where(mask[None, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
+    # rows with empty attention support (causal+window can mask a whole row,
+    # e.g. qpos - window >= Skv) are 0, not the uniform mean-of-v the finite
+    # NEG_INF softmax would give — matching the kernel's l == 0 convention
+    # (surfaced by analysis/pallas_audit.py differential fuzzing)
+    probs = jnp.where(mask.any(axis=-1)[None, None, None, :, None],
+                      probs, 0.0)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
     return out.reshape(B, Sq, H, D).astype(q.dtype)

@@ -50,6 +50,23 @@ def _rbf_gram_kernel(xr_ref, xc_ref, s2_ref, o_ref, *, linear: bool):
     o_ref[...] = jnp.exp(-d2 / (2.0 * s2_ref[0]))
 
 
+def gram_call_spec(Bp: int, D: int, block: int, *, linear: bool) -> dict:
+    """Grid/BlockSpec layout of the dense-Gram ``pallas_call`` (audited via
+    ``ops.AUDIT_CASES``; executed by ``gram_pallas``)."""
+    nb = Bp // block
+    return dict(
+        kernel=functools.partial(_rbf_gram_kernel, linear=linear),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, D), lambda i, j: (j, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Bp), jnp.float32),
+    )
+
+
 def gram_pallas(x, sigma2, *, linear: bool = False, block: int = 128,
                 interpret: bool = True):
     """x: (B, D) -> (B, B) Gram (float32)."""
@@ -59,18 +76,11 @@ def gram_pallas(x, sigma2, *, linear: bool = False, block: int = 128,
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
     Bp = B + pad
-    nb = Bp // block
     s2 = jnp.asarray([sigma2], jnp.float32)
+    call = gram_call_spec(Bp, D, block, linear=linear)
     out = pl.pallas_call(
-        functools.partial(_rbf_gram_kernel, linear=linear),
-        grid=(nb, nb),
-        in_specs=[
-            pl.BlockSpec((block, D), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, D), lambda i, j: (j, 0)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Bp, Bp), jnp.float32),
+        call["kernel"], grid=call["grid"], in_specs=call["in_specs"],
+        out_specs=call["out_specs"], out_shape=call["out_shape"],
         interpret=interpret,
     )(x, x, s2)
     return out[:B, :B]
@@ -102,6 +112,30 @@ def _stats_kernel(kx_ref, kz_ref, rx_ref, cx_ref, rz_ref, cz_ref, mx_ref,
         o_ref[...] = acc_ref[...]
 
 
+def gram_stats_call_spec(B: int, block: int) -> dict:
+    """Grid/BlockSpec layout of the centered-stats reduction over two
+    precomputed (B, B) Grams; the (3,) SMEM accumulator is revisited by the
+    whole (sequential) grid."""
+    nb = B // block
+    return dict(
+        kernel=functools.partial(_stats_kernel, nb=nb),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],
+    )
+
+
 def gram_stats_pallas(Kx, Kz, *, block: int = 128, interpret: bool = True):
     """Fused centering + reductions.  Returns (tr(KxcKzc), ‖Kxc‖², ‖Kzc‖²).
 
@@ -119,24 +153,11 @@ def gram_stats_pallas(Kx, Kz, *, block: int = 128, interpret: bool = True):
     rz = Kz.mean(axis=1)
     cz = Kz.mean(axis=0)
     mz = jnp.asarray([Kz.mean()], jnp.float32)
-    nb = B // block
+    call = gram_stats_call_spec(B, block)
     out = pl.pallas_call(
-        functools.partial(_stats_kernel, nb=nb),
-        grid=(nb, nb),
-        in_specs=[
-            pl.BlockSpec((block, block), lambda i, j: (i, j)),
-            pl.BlockSpec((block, block), lambda i, j: (i, j)),
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-            pl.BlockSpec((block,), lambda i, j: (j,)),
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-            pl.BlockSpec((block,), lambda i, j: (j,)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
-        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
-        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],
-        interpret=interpret,
+        call["kernel"], grid=call["grid"], in_specs=call["in_specs"],
+        out_specs=call["out_specs"], out_shape=call["out_shape"],
+        scratch_shapes=call["scratch_shapes"], interpret=interpret,
     )(Kx.astype(jnp.float32), Kz.astype(jnp.float32), rx, cx, rz, cz, mx, mz)
     return out[0], out[1], out[2]
 
@@ -182,6 +203,32 @@ def _rowsums_kernel(xr_ref, xc_ref, zr_ref, zc_ref, s_ref, rx_ref, rz_ref, *,
                                linear_z).sum(axis=1)
 
 
+def rowsums_call_spec(B: int, Dx: int, Dz: int, block: int, *,
+                      linear_x: bool, linear_z: bool) -> dict:
+    """Streaming row-sum pass layout: (i, j) tiles of the Grams recomputed
+    from activations; the (block,) row-sum outputs are revisited across the
+    innermost column axis j."""
+    nb = B // block
+    return dict(
+        kernel=functools.partial(_rowsums_kernel, linear_x=linear_x,
+                                 linear_z=linear_z),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, Dx), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, Dx), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, Dz), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, Dz), lambda i, j: (j, 0)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B,), jnp.float32),
+                   jax.ShapeDtypeStruct((B,), jnp.float32)],
+    )
+
+
 def nhsic_rowsums_pallas(x, z, s2x, s2z, *, linear_x: bool = False,
                          linear_z: bool = False, block: int = 128,
                          interpret: bool = True):
@@ -191,26 +238,13 @@ def nhsic_rowsums_pallas(x, z, s2x, s2z, *, linear_x: bool = False,
     row sums double as column sums and the total sum is their sum."""
     B = x.shape[0]
     block = _divisor_block(B, block)
-    nb = B // block
     s = jnp.stack([jnp.asarray(s2x, jnp.float32),
                    jnp.asarray(s2z, jnp.float32)])
+    call = rowsums_call_spec(B, x.shape[1], z.shape[1], block,
+                             linear_x=linear_x, linear_z=linear_z)
     return pl.pallas_call(
-        functools.partial(_rowsums_kernel, linear_x=linear_x,
-                          linear_z=linear_z),
-        grid=(nb, nb),
-        in_specs=[
-            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, x.shape[1]), lambda i, j: (j, 0)),
-            pl.BlockSpec((block, z.shape[1]), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, z.shape[1]), lambda i, j: (j, 0)),
-            pl.BlockSpec((2,), lambda i, j: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-        ],
-        out_shape=[jax.ShapeDtypeStruct((B,), jnp.float32),
-                   jax.ShapeDtypeStruct((B,), jnp.float32)],
+        call["kernel"], grid=call["grid"], in_specs=call["in_specs"],
+        out_specs=call["out_specs"], out_shape=call["out_shape"],
         interpret=interpret,
     )(x.astype(jnp.float32), x.astype(jnp.float32),
       z.astype(jnp.float32), z.astype(jnp.float32), s)
@@ -240,6 +274,33 @@ def _stats_feats_kernel(xr_ref, xc_ref, zr_ref, zc_ref, rxr_ref, rxc_ref,
         o_ref[...] = acc_ref[...]
 
 
+def stats_feats_call_spec(B: int, Dx: int, Dz: int, block: int, *,
+                          linear_x: bool, linear_z: bool) -> dict:
+    """Streaming centered-stats pass layout; like ``gram_stats_call_spec``
+    but Gram tiles are recomputed from (block, D) activation tiles and the
+    (3,) SMEM accumulator is revisited by the whole sequential grid."""
+    nb = B // block
+    return dict(
+        kernel=functools.partial(_stats_feats_kernel, nb=nb,
+                                 linear_x=linear_x, linear_z=linear_z),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, Dx), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, Dx), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, Dz), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, Dz), lambda i, j: (j, 0)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((4,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],
+    )
+
+
 def nhsic_stats_feats_pallas(x, z, rx, rz, mx, mz, s2x, s2z, *,
                              linear_x: bool = False, linear_z: bool = False,
                              block: int = 128, interpret: bool = True):
@@ -250,30 +311,16 @@ def nhsic_stats_feats_pallas(x, z, rx, rz, mx, mz, s2x, s2z, *,
     no (B, B) matrix is ever materialized."""
     B = x.shape[0]
     block = _divisor_block(B, block)
-    nb = B // block
     s = jnp.stack([jnp.asarray(s2x, jnp.float32),
                    jnp.asarray(s2z, jnp.float32),
                    jnp.asarray(mx, jnp.float32),
                    jnp.asarray(mz, jnp.float32)])
+    call = stats_feats_call_spec(B, x.shape[1], z.shape[1], block,
+                                 linear_x=linear_x, linear_z=linear_z)
     out = pl.pallas_call(
-        functools.partial(_stats_feats_kernel, nb=nb, linear_x=linear_x,
-                          linear_z=linear_z),
-        grid=(nb, nb),
-        in_specs=[
-            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, x.shape[1]), lambda i, j: (j, 0)),
-            pl.BlockSpec((block, z.shape[1]), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, z.shape[1]), lambda i, j: (j, 0)),
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-            pl.BlockSpec((block,), lambda i, j: (j,)),
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-            pl.BlockSpec((block,), lambda i, j: (j,)),
-            pl.BlockSpec((4,), lambda i, j: (0,)),
-        ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
-        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
-        scratch_shapes=[pltpu.SMEM((3,), jnp.float32)],
-        interpret=interpret,
+        call["kernel"], grid=call["grid"], in_specs=call["in_specs"],
+        out_specs=call["out_specs"], out_shape=call["out_shape"],
+        scratch_shapes=call["scratch_shapes"], interpret=interpret,
     )(x.astype(jnp.float32), x.astype(jnp.float32),
       z.astype(jnp.float32), z.astype(jnp.float32),
       rx.astype(jnp.float32), rx.astype(jnp.float32),
@@ -324,6 +371,35 @@ def _grad_kernel(xr_ref, xc_ref, zr_ref, zc_ref, rxr_ref, rxc_ref, rzr_ref,
         dz_ref[...] += 4.0 * (w.sum(axis=1)[:, None] * zr - w @ zc)
 
 
+def grad_call_spec(B: int, Dx: int, Dz: int, block: int, *,
+                   linear_x: bool, linear_z: bool) -> dict:
+    """Streaming backward pass layout: (block, D) cotangent rows revisited
+    across the innermost column axis j while Gram tiles are recomputed."""
+    nb = B // block
+    return dict(
+        kernel=functools.partial(_grad_kernel, linear_x=linear_x,
+                                 linear_z=linear_z),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, Dx), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, Dx), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, Dz), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, Dz), lambda i, j: (j, 0)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((7,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, Dx), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, Dz), lambda i, j: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, Dx), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Dz), jnp.float32)],
+    )
+
+
 def nhsic_grad_pallas(x, z, rx, rz, scal, *, linear_x: bool = False,
                       linear_z: bool = False, block: int = 128,
                       interpret: bool = True):
@@ -334,28 +410,11 @@ def nhsic_grad_pallas(x, z, rx, rz, scal, *, linear_x: bool = False,
     the saved activations; nothing B×B is read or written."""
     B = x.shape[0]
     block = _divisor_block(B, block)
-    nb = B // block
+    call = grad_call_spec(B, x.shape[1], z.shape[1], block,
+                          linear_x=linear_x, linear_z=linear_z)
     return pl.pallas_call(
-        functools.partial(_grad_kernel, linear_x=linear_x,
-                          linear_z=linear_z),
-        grid=(nb, nb),
-        in_specs=[
-            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, x.shape[1]), lambda i, j: (j, 0)),
-            pl.BlockSpec((block, z.shape[1]), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, z.shape[1]), lambda i, j: (j, 0)),
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-            pl.BlockSpec((block,), lambda i, j: (j,)),
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-            pl.BlockSpec((block,), lambda i, j: (j,)),
-            pl.BlockSpec((7,), lambda i, j: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block, x.shape[1]), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, z.shape[1]), lambda i, j: (i, 0)),
-        ],
-        out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.float32),
-                   jax.ShapeDtypeStruct(z.shape, jnp.float32)],
+        call["kernel"], grid=call["grid"], in_specs=call["in_specs"],
+        out_specs=call["out_specs"], out_shape=call["out_shape"],
         interpret=interpret,
     )(x.astype(jnp.float32), x.astype(jnp.float32),
       z.astype(jnp.float32), z.astype(jnp.float32),

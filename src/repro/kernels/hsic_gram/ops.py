@@ -23,21 +23,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hsic import rbf_sigma2
-from repro.kernels.hsic_gram.kernel import (gram_pallas, gram_stats_pallas,
+from repro.kernels import KernelAuditCase, resolve_interpret
+from repro.kernels.hsic_gram.kernel import (gram_call_spec, gram_pallas,
+                                            gram_stats_call_spec,
+                                            gram_stats_pallas, grad_call_spec,
                                             nhsic_grad_pallas,
                                             nhsic_rowsums_pallas,
-                                            nhsic_stats_feats_pallas)
+                                            nhsic_stats_feats_pallas,
+                                            rowsums_call_spec,
+                                            stats_feats_call_spec)
 
 _EPS = 1e-8
 # Nx→0 guard; large enough that _TINY·_EPS doesn't flush to 0 in f32
 _TINY = 1e-12
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
 
 
 # kept as an alias: the bandwidth lives in core.hsic so the reference and the
@@ -102,8 +100,7 @@ def nhsic(x, z, *, kernel_x: str = "rbf", kernel_z: str = "rbf",
 
     ``interpret=None`` resolves to interpret mode off-TPU, so the same code
     path runs (and is gradient-tested) on CPU CI."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     return _nhsic_fused(jnp.asarray(x, jnp.float32),
                         jnp.asarray(z, jnp.float32),
                         kernel_x, kernel_z, int(block), bool(interpret))
@@ -113,8 +110,7 @@ def nhsic_residuals(x, z, *, kernel_x: str = "rbf", kernel_z: str = "rbf",
                     block: int = 128, interpret: bool | None = None):
     """(value, residual pytree) of the fused fwd — introspection hook for
     benchmarks/tests asserting the bwd residuals stay O(B·D) (no B×B leaf)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     return _nhsic_fwd(jnp.asarray(x, jnp.float32), jnp.asarray(z, jnp.float32),
                       kernel_x, kernel_z, int(block), bool(interpret))
 
@@ -123,11 +119,61 @@ def nhsic_unfused(x, z, *, kernel_x: str = "rbf", kernel_z: str = "rbf",
                   block: int = 128, interpret: bool | None = None):
     """Forward-only two-kernel path (dense B×B Grams in HBM).  Kept for
     benchmarking the fused streaming path against; not differentiable."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     Kx = gram_pallas(x, _sigma2(x), linear=(kernel_x == "linear"),
                      block=block, interpret=interpret)
     Kz = gram_pallas(z, _sigma2(z), linear=(kernel_z == "linear"),
                      block=block, interpret=interpret)
     t, nx, nz = gram_stats_pallas(Kx, Kz, block=block, interpret=interpret)
     return t / (jnp.sqrt(nx) * jnp.sqrt(nz) + _EPS)
+
+
+# --------------------------------------------------------------------------- #
+# kernel-audit registry (analysis/pallas_audit.py)
+# --------------------------------------------------------------------------- #
+def AUDIT_CASES():
+    """Representative layouts of all five hsic_gram ``pallas_call`` sites.
+
+    Shapes mirror the training loss: B=256 batch, D=256 projected
+    activations, 128-lane blocks.  The streaming kernels never see padding
+    tiles — ``_divisor_block`` shrinks the block until it divides B."""
+    f32 = jnp.float32
+    B, Dx, Dz, blk = 256, 256, 64, 128
+    sds = jax.ShapeDtypeStruct
+    x_t, z_t = sds((B, Dx), f32), sds((B, Dz), f32)
+    r_t = sds((B,), f32)
+    row_avals = [x_t, x_t, z_t, z_t]
+    mean_avals = [r_t, r_t, r_t, r_t]
+    return [
+        KernelAuditCase.from_call(
+            "hsic_gram", f"gram_rbf_B{B}D{Dx}",
+            gram_call_spec(B, Dx, blk, linear=False),
+            [x_t, x_t, sds((1,), f32)],
+            notes="each (i, j) Gram tile written exactly once"),
+        KernelAuditCase.from_call(
+            "hsic_gram", f"gram_stats_B{B}",
+            gram_stats_call_spec(B, blk),
+            [sds((B, B), f32), sds((B, B), f32), r_t, r_t, r_t, r_t,
+             sds((1,), f32), sds((1,), f32)],
+            # the (3,) SMEM accumulator is revisited by every grid point;
+            # both axes execute sequentially on TPU
+            sequential_axes=(0, 1)),
+        KernelAuditCase.from_call(
+            "hsic_gram", f"nhsic_rowsums_B{B}",
+            rowsums_call_spec(B, Dx, Dz, blk, linear_x=False, linear_z=False),
+            row_avals + [sds((2,), f32)],
+            # row-sum outputs accumulate across the innermost column axis j
+            sequential_axes=(1,)),
+        KernelAuditCase.from_call(
+            "hsic_gram", f"nhsic_stats_feats_B{B}",
+            stats_feats_call_spec(B, Dx, Dz, blk, linear_x=False,
+                                  linear_z=False),
+            row_avals + mean_avals + [sds((4,), f32)],
+            sequential_axes=(0, 1)),
+        KernelAuditCase.from_call(
+            "hsic_gram", f"nhsic_grad_B{B}",
+            grad_call_spec(B, Dx, Dz, blk, linear_x=False, linear_z=True),
+            row_avals + mean_avals + [sds((7,), f32)],
+            # cotangent rows accumulate across the innermost column axis j
+            sequential_axes=(1,)),
+    ]

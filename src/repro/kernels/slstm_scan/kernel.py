@@ -69,6 +69,43 @@ def _slstm_kernel(g_ref, r_ref, b_ref, c0_ref, n0_ref, m0_ref, h0_ref,
         hf_ref[0, 0] = h_s[...]
 
 
+def slstm_call_spec(B: int, H: int, Sp: int, Dh: int, block_s: int) -> dict:
+    """Grid / BlockSpec / scratch layout of the sLSTM-scan ``pallas_call``.
+
+    Single source of truth: ``slstm_scan_pallas`` executes it and the
+    kernel auditor (``analysis/pallas_audit.py``, via ``ops.AUDIT_CASES``)
+    checks it statically.  ``Sp`` is the padded, block-dividing sequence
+    length."""
+    ns = Sp // block_s
+    f32 = jnp.float32
+    state_spec = lambda: pl.BlockSpec((1, 1, Dh),            # noqa: E731
+                                      lambda bi, hi, si: (bi, hi, 0))
+    return dict(
+        kernel=functools.partial(_slstm_kernel, block_s=block_s, num_s=ns),
+        grid=(B, H, ns),
+        in_specs=[
+            pl.BlockSpec((1, block_s, 4, 1, Dh),
+                         lambda bi, hi, si: (bi, si, 0, hi, 0)),
+            pl.BlockSpec((4, 1, Dh, Dh), lambda bi, hi, si: (0, hi, 0, 0)),
+            pl.BlockSpec((4, 1, Dh), lambda bi, hi, si: (0, hi, 0)),
+            state_spec(), state_spec(), state_spec(), state_spec(),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, 1, Dh),
+                         lambda bi, hi, si: (bi, si, hi, 0)),
+            state_spec(), state_spec(), state_spec(), state_spec(),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, H, Dh), f32),
+            jax.ShapeDtypeStruct((B, H, Dh), f32),
+            jax.ShapeDtypeStruct((B, H, Dh), f32),
+            jax.ShapeDtypeStruct((B, H, Dh), f32),
+            jax.ShapeDtypeStruct((B, H, Dh), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dh,), f32) for _ in range(4)],
+    )
+
+
 def slstm_scan_pallas(g_in, r, b, state0, *, block_s: int = 128,
                       interpret: bool = True):
     """g_in: (B, S, 4, H, Dh) f32; r: (4, H, Dh, Dh); b: (4, H, Dh);
@@ -85,40 +122,13 @@ def slstm_scan_pallas(g_in, r, b, state0, *, block_s: int = 128,
         g_in = g_in.at[:, S:, 1].set(30.0)
         g_in = g_in.at[:, S:, 3].set(-30.0)
     Sp = S + pad
-    ns = Sp // block_s
 
-    kernel = functools.partial(_slstm_kernel, block_s=block_s, num_s=ns)
     f32 = jnp.float32
+    call = slstm_call_spec(B, H, Sp, Dh, block_s)
     hs, cf, nf, mf, hf = pl.pallas_call(
-        kernel,
-        grid=(B, H, ns),
-        in_specs=[
-            pl.BlockSpec((1, block_s, 4, 1, Dh),
-                         lambda bi, hi, si: (bi, si, 0, hi, 0)),
-            pl.BlockSpec((4, 1, Dh, Dh), lambda bi, hi, si: (0, hi, 0, 0)),
-            pl.BlockSpec((4, 1, Dh), lambda bi, hi, si: (0, hi, 0)),
-            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
-            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
-            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
-            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, block_s, 1, Dh),
-                         lambda bi, hi, si: (bi, si, hi, 0)),
-            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
-            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
-            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
-            pl.BlockSpec((1, 1, Dh), lambda bi, hi, si: (bi, hi, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, Sp, H, Dh), f32),
-            jax.ShapeDtypeStruct((B, H, Dh), f32),
-            jax.ShapeDtypeStruct((B, H, Dh), f32),
-            jax.ShapeDtypeStruct((B, H, Dh), f32),
-            jax.ShapeDtypeStruct((B, H, Dh), f32),
-        ],
-        scratch_shapes=[pltpu.VMEM((Dh,), f32) for _ in range(4)],
-        interpret=interpret,
+        call["kernel"], grid=call["grid"], in_specs=call["in_specs"],
+        out_specs=call["out_specs"], out_shape=call["out_shape"],
+        scratch_shapes=call["scratch_shapes"], interpret=interpret,
     )(g_in.astype(f32), r.astype(f32), b.astype(f32),
       state0["c"].astype(f32), state0["n"].astype(f32),
       state0["m"].astype(f32), state0["h"].astype(f32))

@@ -5,16 +5,11 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.slstm_scan.kernel import slstm_scan_pallas
+from repro.kernels import KernelAuditCase, resolve_interpret
+from repro.kernels.slstm_scan.kernel import slstm_call_spec, slstm_scan_pallas
 from repro.kernels.slstm_scan.ref import slstm_scan_ref
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
@@ -49,9 +44,38 @@ _scan.defvjp(_scan_fwd, _scan_bwd)
 def slstm_scan(g_in, r, b, state0: dict, *, block_s: int = 128,
                interpret: bool | None = None):
     """g_in: (B, S, 4, H, Dh); returns (hs (B, S, H, Dh), final state)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     hs, fin = _scan(g_in, r, b,
                     (state0["c"], state0["n"], state0["m"], state0["h"]),
                     block_s, interpret)
     return hs, dict(zip(("c", "n", "m", "h"), fin))
+
+
+# --------------------------------------------------------------------------- #
+# kernel-audit registry (analysis/pallas_audit.py)
+# --------------------------------------------------------------------------- #
+def _slstm_case(name, B, H, S, Dh, block_s):
+    call = slstm_call_spec(B, H, S, Dh, block_s)
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    state = sds((B, H, Dh), f32)
+    avals = [sds((B, S, 4, H, Dh), f32), sds((4, H, Dh, Dh), f32),
+             sds((4, H, Dh), f32), state, state, state, state]
+    return KernelAuditCase.from_call(
+        "slstm_scan", name, call, avals,
+        # the seq-block axis (2) is innermost and sequential: the final
+        # (c, n, m, h) blocks are revisited per seq block (last write wins
+        # under pl.when(si == ns-1)); hs blocks are written exactly once
+        sequential_axes=(2,), masked=True,
+        notes="padding handled by the wrapper's gate-neutral pad "
+              "(i'≈0, f'=1), not an in-kernel mask")
+
+
+def AUDIT_CASES():
+    """Representative sLSTM-scan layouts for the static auditor."""
+    return [
+        # the docstring's VMEM budget claim, as an audited case:
+        # r block 4·Dh² f32 = 4 MiB at Dh=512 + g tile + hs tile
+        _slstm_case("scan_Dh512_S256", 2, 2, 256, 512, 128),
+        _slstm_case("scan_Dh64_S128", 2, 4, 128, 64, 128),
+    ]

@@ -85,6 +85,37 @@ def test_kernel_without_ref_or_test_is_caught(tmp_path):
                           for line in r.stdout.splitlines()]
 
 
+def test_pallas_call_interpret_rule(tmp_path):
+    make_tree(tmp_path, {
+        "repro/kernels/toy/missing.py":
+            "from jax.experimental import pallas as pl\n"
+            "out = pl.pallas_call(lambda r: None, grid=(1,))\n",
+        "repro/kernels/toy/hardcoded.py":
+            "from jax.experimental import pallas as pl\n"
+            "out = pl.pallas_call(lambda r: None, grid=(1,),\n"
+            "                     interpret=True)\n",
+        "repro/kernels/toy/waived.py":
+            "from jax.experimental import pallas as pl\n"
+            "out = pl.pallas_call(\n"
+            "    lambda r: None, grid=(1,),\n"
+            "    interpret=True)  # contracts: allow=CON-INTERPRET\n",
+        "repro/kernels/toy/threaded.py":
+            "from jax.experimental import pallas as pl\n"
+            "from repro.kernels import resolve_interpret\n"
+            "def f(interpret=None):\n"
+            "    interpret = resolve_interpret(interpret)\n"
+            "    return pl.pallas_call(lambda r: None, grid=(1,),\n"
+            "                          interpret=interpret)\n"})
+    r = run_linter(tmp_path)
+    assert r.returncode == 1
+    assert r.stdout.count("CON-INTERPRET") == 2
+    assert "missing.py:2" in r.stdout
+    assert "hardcoded.py:3" in r.stdout          # the kwarg's line
+    assert "resolve_interpret" in r.stdout       # says what to use instead
+    assert "waived.py" not in r.stdout
+    assert "threaded.py" not in r.stdout
+
+
 @pytest.mark.slow
 def test_real_tree_is_clean():
     r = run_linter(REPO)

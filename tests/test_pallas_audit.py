@@ -1,0 +1,290 @@
+"""analysis/pallas_audit.py: every planted defect class fires its named
+check at the kernel's source location; the three real kernel families pass
+clean; the differential fuzzer catches seeded divergence and the
+fuzzer-surfaced flash empty-window divergence stays pinned."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis import pallas_audit
+from repro.analysis.report import Report
+from repro.kernels import KernelAuditCase
+
+f32 = jnp.float32
+sds = jax.ShapeDtypeStruct
+
+
+# --------------------------------------------------------------------------- #
+# planted-defect toy kernels (module level so location() resolves here)
+# --------------------------------------------------------------------------- #
+def _toy_copy(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _toy_accum(x_ref, o_ref):
+    o_ref[...] = o_ref[...] + x_ref[...]
+
+
+def _toy_case(name, *, grid, in_avals, in_specs, out_avals, out_specs,
+              kernel=_toy_copy, scratch=(), sequential_axes=(),
+              masked=False):
+    return KernelAuditCase(
+        family="toy", name=name, kernel_fn=kernel, grid=tuple(grid),
+        in_avals=tuple(in_avals), in_specs=tuple(in_specs),
+        out_avals=tuple(out_avals), out_specs=tuple(out_specs),
+        scratch_shapes=tuple(scratch),
+        sequential_axes=tuple(sequential_axes), masked=masked)
+
+
+def _audit(case, **kw):
+    report = Report()
+    pallas_audit.audit_case(case, report, **kw)
+    return report
+
+
+def _the_finding(report, check):
+    hits = [f for f in report.findings if f.check == check]
+    assert hits, f"no {check} finding in: " + \
+        "; ".join(f.check for f in report.findings)
+    return hits[0]
+
+
+def test_clean_toy_has_no_findings():
+    case = _toy_case(
+        "clean", grid=(4,),
+        in_avals=[sds((32,), f32)],
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_avals=[sds((32,), f32)],
+        out_specs=[pl.BlockSpec((8,), lambda i: (i,))])
+    assert _audit(case).ok()
+
+
+def test_undeclared_revisit_is_a_write_race():
+    # axis 1 (innermost) revisits every out block but is not declared
+    case = _toy_case(
+        "undeclared", grid=(2, 4), kernel=_toy_accum,
+        in_avals=[sds((16, 32), f32)],
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_avals=[sds((16, 8), f32)],
+        out_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, 0))])
+    f = _the_finding(_audit(case), "pallas.write-race")
+    assert f.severity == "error"
+    assert "sequential_axes" in f.message
+    assert "test_pallas_audit.py" in f.location
+
+
+def test_non_innermost_revisit_is_a_write_race_even_if_declared():
+    # out block depends on the INNER axis only: the outer axis revisits
+    # it with inner-axis iterations in between -> clobbered accumulator
+    case = _toy_case(
+        "noninner", grid=(4, 2), kernel=_toy_accum,
+        in_avals=[sds((32, 16), f32)],
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_avals=[sds((16, 8), f32)],
+        out_specs=[pl.BlockSpec((8, 8), lambda i, j: (j, 0))],
+        sequential_axes=(0,))
+    f = _the_finding(_audit(case), "pallas.write-race")
+    assert "innermost" in f.message
+
+
+def test_out_of_bounds_block_start_is_caught():
+    # 4 blocks of 8 over a 16-long operand: blocks 2, 3 start past the end
+    case = _toy_case(
+        "oob", grid=(4,),
+        in_avals=[sds((16,), f32)],
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_avals=[sds((32,), f32)],
+        out_specs=[pl.BlockSpec((8,), lambda i: (i,))])
+    f = _the_finding(_audit(case), "pallas.oob-block")
+    assert "in[0]" in f.message
+    assert "test_pallas_audit.py" in f.location
+
+
+def test_partial_tile_without_mask_declaration_is_caught():
+    case = _toy_case(
+        "padding", grid=(3,),
+        in_avals=[sds((20,), f32)],
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_avals=[sds((20,), f32)],
+        out_specs=[pl.BlockSpec((8,), lambda i: (i,))])
+    f = _the_finding(_audit(case), "pallas.unmasked-padding")
+    assert "padding" in f.message
+    assert "test_pallas_audit.py" in f.location
+
+
+def test_stale_masked_declaration_is_caught():
+    # masked=True but the kernel source has no pl.when / iota construct
+    case = _toy_case(
+        "stalemask", grid=(3,),
+        in_avals=[sds((20,), f32)],
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_avals=[sds((20,), f32)],
+        out_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        masked=True)
+    f = _the_finding(_audit(case), "pallas.unmasked-padding")
+    assert "stale" in f.message
+
+
+def test_vmem_budget_overflow_is_caught():
+    case = _toy_case(
+        "hog", grid=(2,),
+        in_avals=[sds((16,), f32)],
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_avals=[sds((16,), f32)],
+        out_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        scratch=[pltpu.VMEM((4096, 4096), f32)])      # 64 MiB
+    f = _the_finding(_audit(case), "pallas.vmem-budget")
+    assert "16 MiB" in f.message
+    # the budget is configurable: a 128 MiB budget admits the same case
+    assert _audit(case, vmem_budget_mib=128.0).ok()
+
+
+def test_smem_scratch_is_not_billed_to_vmem():
+    case = _toy_case(
+        "smem", grid=(2,),
+        in_avals=[sds((16,), f32)],
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_avals=[sds((16,), f32)],
+        out_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        scratch=[pltpu.SMEM((4,), f32)])
+    report = Report()
+    row = pallas_audit.audit_case(case, report)
+    assert report.ok()
+    assert row["smem_bytes"] == 16
+    assert row["breakdown"]["scratch[0]"] == 16
+
+
+def test_low_precision_accumulation_is_caught():
+    case = _toy_case(
+        "bf16", grid=(2,), kernel=_toy_accum,
+        in_avals=[sds((16, 8), jnp.bfloat16)],
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_avals=[sds((16, 8), jnp.bfloat16)],
+        out_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))])
+    f = _the_finding(_audit(case), "pallas.low-precision-accum")
+    assert "f32" in f.message
+    # an f32 scratch accumulator is accepted evidence
+    fixed = _toy_case(
+        "bf16_f32scratch", grid=(2,), kernel=_toy_accum,
+        in_avals=[sds((16, 8), jnp.bfloat16)],
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_avals=[sds((16, 8), jnp.bfloat16)],
+        out_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        scratch=[pltpu.VMEM((8, 8), f32)])
+    assert _audit(fixed).ok()
+
+
+def test_waiver_downgrades_kernel_findings():
+    case = _toy_case(
+        "padding", grid=(3,),
+        in_avals=[sds((20,), f32)],
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_avals=[sds((20,), f32)],
+        out_specs=[pl.BlockSpec((8,), lambda i: (i,))])
+    report = Report(waive={"pallas.unmasked-padding"})
+    pallas_audit.audit_case(case, report)
+    assert report.ok()
+    assert any(f.waived for f in report.findings)
+
+
+# --------------------------------------------------------------------------- #
+# the real kernel families pass clean
+# --------------------------------------------------------------------------- #
+def test_real_families_pass_clean():
+    report = pallas_audit.run_kernel_audits()
+    assert report.ok(), report.render()
+    table = report.artifacts["kernel_vmem"]
+    fams = {row["family"] for row in table}
+    assert fams == set(pallas_audit.FAMILIES)
+    # every registered case resolves to its kernel.py source
+    for case in pallas_audit.iter_cases():
+        assert "/kernels/" in case.location()
+        assert "kernel.py:" in case.location()
+    # the sLSTM docstring's VMEM claim, audited: Dh=512 fits the budget
+    big = next(r for r in table if r["name"] == "scan_Dh512_S256")
+    assert 4.0 < big["vmem_mib"] < 16.0
+
+
+def test_every_family_registers_audit_cases():
+    for fam in pallas_audit.FAMILIES:
+        cases = pallas_audit.iter_cases([fam])
+        assert cases, f"{fam} registers no audit cases"
+        names = [c.name for c in cases]
+        assert len(names) == len(set(names))
+
+
+# --------------------------------------------------------------------------- #
+# differential fuzzer
+# --------------------------------------------------------------------------- #
+def test_fuzzer_smoke_flash():
+    report = Report()
+    pallas_audit.fuzz_families(report, n_cases=2, seed=3,
+                               families=["flash_attention"])
+    assert report.ok(), report.render()
+    s = report.artifacts["kernel_fuzz"]["flash_attention"]
+    assert s["cases"] == 2 and s["checks"] == 8 and s["failures"] == 0
+
+
+def test_fuzzer_catches_divergence(monkeypatch):
+    # seed a deliberately broken draw: the fuzzer must turn it into a
+    # pallas.fuzz-mismatch carrying the draw parameters
+    def broken(rng):
+        return [("toy fwd", 1.0, 1e-3, {"B": 2})]
+    monkeypatch.setitem(pallas_audit._FUZZERS, "flash_attention", broken)
+    report = Report()
+    pallas_audit.fuzz_families(report, n_cases=1,
+                               families=["flash_attention"])
+    f = _the_finding(report, "pallas.fuzz-mismatch")
+    assert "'B': 2" in f.message
+    assert report.artifacts["kernel_fuzz"]["flash_attention"][
+        "failures"] == 1
+
+
+def test_fuzzer_reports_crashes(monkeypatch):
+    def crash(rng):
+        raise ValueError("boom")
+    monkeypatch.setitem(pallas_audit._FUZZERS, "slstm_scan", crash)
+    report = Report()
+    pallas_audit.fuzz_families(report, n_cases=1, families=["slstm_scan"])
+    f = _the_finding(report, "pallas.fuzz-error")
+    assert "boom" in f.message
+
+
+# --------------------------------------------------------------------------- #
+# fuzzer-surfaced regression, pinned at the found shapes: causal + window
+# rows with EMPTY attention support (qpos - window >= Skv) must be 0 in
+# kernel AND reference — the ref used to emit uniform mean-of-v there
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,H,KV,Sq,Skv,bq,bkv,window", [
+    (1, 2, 1, 41, 14, 8, 128, 4),
+    (2, 2, 2, 20, 1, 16, 16, 3),
+])
+def test_flash_empty_window_rows_pinned(B, H, KV, Sq, Skv, bq, bkv, window):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, 8), np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Skv, KV, 8), np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Skv, KV, 8), np.float32))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=bq, block_kv=bkv, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    assert pallas_audit._rel_err(out, ref) < 1e-3
+    # the rows past the window horizon exist and are exactly zero
+    first_empty = Skv + window - 1
+    assert first_empty < Sq
+    np.testing.assert_array_equal(np.asarray(ref)[:, first_empty:], 0.0)
+    np.testing.assert_allclose(np.asarray(out)[:, first_empty:], 0.0,
+                               atol=1e-6)
+    # and their gradients agree too (bwd routes through the ref VJP)
+    w = jnp.asarray(rng.standard_normal(ref.shape, np.float32))
+    gk = jax.grad(lambda v_: jnp.sum(flash_attention(
+        q, k, v_, causal=True, window=window, block_q=bq, block_kv=bkv,
+        interpret=True) * w))(v)
+    gr = jax.grad(lambda v_: jnp.sum(
+        attention_ref(q, k, v_, causal=True, window=window) * w))(v)
+    assert pallas_audit._rel_err(gk, gr) < 1e-3

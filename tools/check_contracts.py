@@ -25,6 +25,14 @@ exist yet, or about where code lives):
                  (``tests/test_kernel_*.py`` importing that ref) — a
                  kernel whose oracle is itself is not tested.
 
+  CON-INTERPRET  Every ``pl.pallas_call(...)`` site must thread an
+                 ``interpret=`` kwarg that is NOT a hard-coded constant —
+                 the mode must flow from the one canonical
+                 ``repro.kernels.resolve_interpret`` seam so CPU CI and
+                 TPU runs exercise the same call site.  A missing kwarg
+                 silently compiles on CI-less CPU paths; a hard-coded
+                 ``interpret=True`` silently never compiles on TPU.
+
 Waive a finding on a specific line with ``# contracts: allow=RULE``
 (comma-separate multiple rules).  Exit 1 on any un-waived finding.
 
@@ -114,6 +122,26 @@ def check_file(path: pathlib.Path, rel: str) -> list:
                     f"{', '.join(p.rsplit('/', 1)[-1] for p in PRNGKEY_SEAMS)}); "
                     f"a key created here is invisible to checkpointing "
                     f"and to the RNG-discipline audit"))
+        if chain.endswith("pallas_call") or chain == "pallas_call":
+            kw = next((k for k in node.keywords
+                       if k.arg == "interpret"), None)
+            if kw is None:
+                if not _allowed(lines, node.lineno, "CON-INTERPRET"):
+                    findings.append(Finding(
+                        "CON-INTERPRET", rel, node.lineno,
+                        "pallas_call without an interpret= kwarg — thread "
+                        "the mode from repro.kernels.resolve_interpret so "
+                        "the same call site runs interpreted on CPU CI "
+                        "and compiled on TPU"))
+            elif isinstance(kw.value, ast.Constant):
+                if not _allowed(lines, kw.value.lineno, "CON-INTERPRET"):
+                    findings.append(Finding(
+                        "CON-INTERPRET", rel, kw.value.lineno,
+                        f"pallas_call with hard-coded "
+                        f"interpret={kw.value.value!r} — the mode must "
+                        f"flow from resolve_interpret (None -> interpret "
+                        f"off-TPU), never a literal, or one of CPU CI / "
+                        f"TPU runs exercises a different code path"))
     return findings
 
 
